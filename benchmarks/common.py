@@ -1,0 +1,91 @@
+"""Shared benchmark harness: live H-SGD training trajectories on the
+paper's non-IID classification setup (CPU scale), plus the paper's
+communication-time model (Table E.1)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HSGD, GroupedTopology, HierarchySpec, UniformTopology
+from repro.data import FederatedDataset, label_shard_partition, make_classification
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import sgd
+
+# Table E.1 (ms per aggregation round) + measured 4 ms/iteration compute
+COMM_MS = {
+    "cnn": {"near": 0.29, "far": 4.53},
+    "vgg11": {"near": 27.81, "far": 291.82},
+}
+COMPUTE_MS_PER_ITER = 4.0
+
+
+def make_world(n_workers: int = 8, num_classes: int = 8, dim: int = 24,
+               seed: int = 3):
+    x, y = make_classification(seed, num_classes=num_classes, dim=dim,
+                               per_class=80, spread=1.5)
+    parts = label_shard_partition(
+        y, [[j % num_classes] for j in range(n_workers)])
+    ds = FederatedDataset(x, y, parts)
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=dim, hidden=32,
+                                     num_classes=num_classes))
+    return ds, model
+
+
+def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
+               bs: int = 10, eval_every: int = 8) -> List[Dict]:
+    eng = HSGD(model.loss, sgd(lr), topology, jit=True)
+    st = eng.init(jax.random.PRNGKey(seed), model.init)
+    gb = jax.tree.map(jnp.asarray, ds.global_batch(640))
+    hist = []
+    for t in range(T):
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, bs)))
+        if (t + 1) % eval_every == 0 or t + 1 == T:
+            wbar = eng.mean_params(st)
+            hist.append({
+                "step": t + 1,
+                "loss": float(model.loss(wbar, gb)[0]),
+                "acc": float(model.accuracy(wbar, gb)),
+            })
+    return hist
+
+
+def mean_trajectories(ds, model, topo_fn, T, seeds=(0, 1, 2), **kw):
+    runs = [trajectory(ds, model, topo_fn(), T, seed=s, **kw) for s in seeds]
+    out = []
+    for recs in zip(*runs):
+        out.append({"step": recs[0]["step"],
+                    "loss": float(np.mean([r["loss"] for r in recs])),
+                    "acc": float(np.mean([r["acc"] for r in recs]))})
+    return out
+
+
+def comm_time_ms(spec: HierarchySpec, steps: int, model_kind: str = "cnn",
+                 single_level_is_far: bool = True) -> float:
+    """Paper communication model: every level-M (innermost) aggregation costs
+    a near round; every level-1 (global) aggregation a far round; single-level
+    local SGD always pays the far cost (workers -> global server)."""
+    c = COMM_MS[model_kind]
+    total = steps * COMPUTE_MS_PER_ITER
+    for t in range(steps):
+        lvl = spec.sync_level(t)
+        if lvl is None:
+            continue
+        if spec.num_levels == 1:
+            total += c["far"] if single_level_is_far else c["near"]
+        elif lvl == 1:
+            total += c["far"]
+        else:
+            total += c["near"]
+    return total
+
+
+def time_to_target(hist: List[Dict], spec: HierarchySpec, target_acc: float,
+                   model_kind: str = "cnn") -> Optional[float]:
+    for rec in hist:
+        if rec["acc"] >= target_acc:
+            return comm_time_ms(spec, rec["step"], model_kind)
+    return None

@@ -1,0 +1,259 @@
+"""§Perf hillclimbing: hypothesis -> change -> re-lower -> measure -> record,
+for the three chosen (arch x shape) pairs.
+
+Pairs (chosen from the baseline roofline table):
+  * nemotron-4-340b x train_4k x multi — most representative of the paper's
+    technique (H-SGD across pods at frontier scale); collective-dominant.
+  * qwen2-0.5b      x train_4k x multi — worst useful-compute ratio (0.66):
+    16-way tensor parallelism of a 0.5B model is the wrong layout.
+  * mixtral-8x22b   x train_4k x multi — memory-dominant monster (MoE
+    dispatch re-gathers expert weights every token group).
+
+Each variant re-lowers the H-SGD train steps with one knob changed relative
+to the current best, writes before/after terms to
+benchmarks/results/perf.json, and marks confirmed/refuted.
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [--pair nemotron...]
+"""
+import os  # noqa: E402  (device override must precede jax import)
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse   # noqa: E402
+import dataclasses  # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.dryrun import HSGD_G, HSGD_I, lower_train  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline import analyze_compiled, combine_train_steps  # noqa: E402
+
+OUT = "benchmarks/results/perf.json"
+
+
+def measure(arch: str, shape_name: str, *, cfg_over=None, **knobs):
+    cfg = get_config(arch)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    mesh = make_production_mesh(multi_pod=True)
+    with jax.set_mesh(mesh):  # context mesh for act_pspec sharding constraints
+        lowered = lower_train(cfg, INPUT_SHAPES[shape_name], mesh, **knobs)
+        lowered.pop("_plan", None)
+        reports = {}
+        for kname, low in lowered.items():
+            reports[kname] = analyze_compiled(kname, low.compile(), pod_size=256)
+    amort = combine_train_steps(reports, HSGD_G, HSGD_I)
+    head = reports.get("global_sync") or next(iter(reports.values()))
+    return {
+        "terms_s": {"compute": head.compute_s, "memory": head.memory_s,
+                    "collective": head.collective_s},
+        "amortized": amort,
+        "peak_gb": (head.peak_memory_bytes or 0) / 1e9,
+        "coll_cross_gb": head.coll_cross / 1e9,
+        "coll_intra_gb": head.coll_intra / 1e9,
+        "flops_per_chip": head.flops_per_chip,
+    }
+
+
+# ---------------------------------------------------------------------------
+# iteration definitions: (name, hypothesis, cfg overrides, lower_train knobs)
+# each entry's options are ABSOLUTE (already composed with the accepted
+# predecessors, per the hillclimbing methodology)
+# ---------------------------------------------------------------------------
+ITERATIONS = {
+    "nemotron-4-340b|train_4k": [
+        ("baseline", "paper-faithful H-SGD, fsdp mapping, fp32 sync", {}, {}),
+        ("act_shard",
+         "the baseline HLO re-shards the residual stream every layer "
+         "(per-layer activation all-gathers over 'data'); pinning acts to "
+         "P(data, None, model) should remove them: collective term down "
+         "several x, compute unchanged",
+         {"act_pspec": ("data", None, "model")}, {}),
+        ("remat",
+         "memory term is residual-dominated (96 layers x 1.2GB saved "
+         "carries); remat the unit body: bytes down ~2x for <= ~30% more "
+         "flops (recompute)",
+         {"act_pspec": ("data", None, "model"), "remat": True}, {}),
+        ("bf16_sync",
+         "cross-pod sync moves fp32 means (5.3GB/chip); bf16 payload halves "
+         "the DCI bytes of the global sync at negligible convergence cost "
+         "(beyond-paper; paper treats compression as orthogonal)",
+         {"act_pspec": ("data", None, "model"), "remat": True},
+         {"sync_dtype": "bfloat16"}),
+        ("accum8",
+         "peak 44.3GB still exceeds the 16GB HBM; accumulate gradients over "
+         "8 microbatches (identical semantics for SGD, tested): peak "
+         "activations / 8, terms ~unchanged",
+         {"act_pspec": ("data", None, "model"), "remat": True},
+         {"accum_steps": 8}),
+    ],
+    "qwen2-0.5b|train_4k": [
+        ("baseline", "16-way TP of a 0.5B model: d=896 matmuls sliced to 56 "
+         "columns; expect collective/memory-bound", {}, {}),
+        ("dp_only",
+         "replicate weights inside a worker (params fit trivially: 1GB) and "
+         "shard the SEQUENCE over 'model' instead: TP all-reduces (0.3TB/"
+         "chip/step) become tiny kv all-gathers; collective down ~10x",
+         {}, {"model_shard": False, "seq_axis": "model"}),
+        ("dp_only+bf16_sync",
+         "with compute now local, the remaining collective is the param "
+         "sync; halve it with bf16 payloads",
+         {}, {"model_shard": False, "seq_axis": "model",
+              "sync_dtype": "bfloat16"}),
+        ("dp_only+chunk2048",
+         "larger q-chunks (512->2048) cut scan trip count 4x: less loop "
+         "overhead bytes, same flops",
+         {"attn_chunk_q": 2048},
+         {"model_shard": False, "seq_axis": "model",
+          "sync_dtype": "bfloat16"}),
+    ],
+    "mixtral-8x22b|train_4k": [
+        ("baseline", "fsdp mapping; MoE dispatch re-gathers expert weights "
+         "every 2048-token group: memory-dominant", {}, {}),
+        ("moe_group8k",
+         "4x larger token groups -> 4x fewer expert-weight gathers per "
+         "layer; dispatch tensor grows 16x but stays < 1GB: memory term "
+         "down ~3-4x",
+         {"moe_group": 8192}, {}),
+        ("moe_group8k+remat",
+         "then cut residual traffic with remat on the unit scan",
+         {"moe_group": 8192, "remat": True}, {}),
+        ("moe_group8k+remat+act_shard",
+         "pin the residual stream to P(data, None, model) to stop per-layer "
+         "re-sharding",
+         {"moe_group": 8192, "remat": True,
+          "act_pspec": ("data", None, "model")}, {}),
+        ("group2k+remat+act_shard",
+         "moe_group8k was (partially) refuted: dispatch-tensor flops/bytes "
+         "scale with capacity, eating the fewer-weight-gathers win; revert "
+         "to 2048-token groups while keeping remat + act_shard",
+         {"remat": True, "act_pspec": ("data", None, "model")}, {}),
+        ("gather_dispatch",
+         "root cause isolated: the one-hot dispatch/combine einsums are "
+         "O(T*E*C*d) — more flops+bytes than the experts themselves. "
+         "Replace with an (E,C) token-id scatter + gathers (O(E*C*d) bytes, "
+         "no dispatch matmul; numerically identical — tested): memory term "
+         "down several x",
+         {"moe_group": 8192, "remat": True, "moe_dispatch": "gather",
+          "act_pspec": ("data", None, "model")}, {}),
+        ("gather+group32k",
+         "with gather dispatch the group size no longer costs dispatch "
+         "flops; 4x bigger groups -> 4x fewer expert-weight re-reads per "
+         "layer (the remaining memory term): memory down ~2-3x more",
+         {"moe_group": 32768, "remat": True, "moe_dispatch": "gather",
+          "act_pspec": ("data", None, "model")}, {}),
+    ],
+}
+
+
+# ---------------------------------------------------------------------------
+# bonus pair (beyond the required three): nemotron prefill — worst absolute
+# baseline in the whole roofline table (collective 1003 s/step)
+# ---------------------------------------------------------------------------
+def measure_prefill(arch: str, shape_name: str, cfg_over=None):
+    from repro.launch.dryrun import lower_prefill
+    cfg = get_config(arch)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    mesh = make_production_mesh(multi_pod=True)
+    with jax.set_mesh(mesh):
+        low = lower_prefill(cfg, INPUT_SHAPES[shape_name], mesh)["prefill"]
+        rep = analyze_compiled("prefill", low.compile(), pod_size=256)
+    return {
+        "terms_s": {"compute": rep.compute_s, "memory": rep.memory_s,
+                    "collective": rep.collective_s},
+        "peak_gb": (rep.peak_memory_bytes or 0) / 1e9,
+        "coll_intra_gb": rep.coll_intra / 1e9,
+    }
+
+
+SERVE_ITERATIONS = [
+    ("baseline", "serving params FSDP'd over 'data' vs batch-sharded "
+     "activations: GSPMD gathers 39GB f32 activations per layer", {}),
+    ("act_shard",
+     "pin the residual stream to P((pod,data), None, model): activations "
+     "stay batch-sharded, weights get gathered instead (42GB once per "
+     "layer, not per chunk): collective down ~5-10x",
+     {"act_pspec": (("pod", "data"), None, "model")}),
+    ("act_shard+chunk2048",
+     "4x fewer q-chunk iterations -> 4x fewer per-chunk k/v re-gathers",
+     {"act_pspec": (("pod", "data"), None, "model"), "attn_chunk_q": 2048}),
+]
+
+
+def run_serve_pair(results, force=False):
+    pair = "nemotron-4-340b|prefill_32k"
+    for name, hypothesis, cfg_over in SERVE_ITERATIONS:
+        key = f"{pair}|{name}"
+        if key in results and not force:
+            print(f"skip (cached) {key}")
+            continue
+        print(f"=== {key}\n    hypothesis: {hypothesis}")
+        t0 = time.time()
+        try:
+            rec = measure_prefill("nemotron-4-340b", "prefill_32k", cfg_over)
+            rec["hypothesis"] = hypothesis
+            rec["cfg_overrides"] = {k: str(v) for k, v in cfg_over.items()}
+            rec["wall_s"] = round(time.time() - t0, 1)
+            results[key] = rec
+            t = rec["terms_s"]
+            print(f"    terms: compute {t['compute']:.2f}s memory "
+                  f"{t['memory']:.2f}s collective {t['collective']:.2f}s "
+                  f"peak {rec['peak_gb']:.1f}GB")
+        except Exception as e:
+            traceback.print_exc()
+            results[key] = {"error": str(e)[:500], "hypothesis": hypothesis}
+        with open(OUT, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(OUT) and not args.force:
+        with open(OUT) as f:
+            results = json.load(f)
+
+    if args.pair in ("all", "prefill"):
+        run_serve_pair(results, force=args.force)
+    for pair, iters in ITERATIONS.items():
+        if args.pair != "all" and args.pair not in pair:
+            continue
+        arch, shape = pair.split("|")
+        for name, hypothesis, cfg_over, knobs in iters:
+            key = f"{pair}|{name}"
+            if key in results and not args.force:
+                print(f"skip (cached) {key}")
+                continue
+            print(f"=== {key}\n    hypothesis: {hypothesis}")
+            t0 = time.time()
+            try:
+                rec = measure(arch, shape, cfg_over=cfg_over, **knobs)
+                rec["hypothesis"] = hypothesis
+                rec["cfg_overrides"] = {k: str(v) for k, v in cfg_over.items()}
+                rec["knobs"] = {k: str(v) for k, v in knobs.items()}
+                rec["wall_s"] = round(time.time() - t0, 1)
+                results[key] = rec
+                a = rec["amortized"]
+                print(f"    amortized: compute {a['compute_s']:.3f}s "
+                      f"memory {a['memory_s']:.3f}s "
+                      f"collective {a['collective_s']:.3f}s "
+                      f"(dominant {a['dominant']}) peak {rec['peak_gb']:.1f}GB")
+            except Exception as e:
+                traceback.print_exc()
+                results[key] = {"error": str(e)[:500],
+                                "hypothesis": hypothesis}
+            with open(OUT, "w") as f:
+                json.dump(results, f, indent=1)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

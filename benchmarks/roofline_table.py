@@ -1,0 +1,67 @@
+"""Roofline table (§Roofline deliverable): renders benchmarks/results/
+dryrun.json into the per-(arch x shape x mesh) three-term table."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(path: str = "benchmarks/results/dryrun.json") -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(results: Dict) -> List[Dict]:
+    out = []
+    for key, rec in sorted(results.items()):
+        arch, shape, mesh = key.split("|")
+        steps = rec["steps"]
+        head_name = "global_sync" if "global_sync" in steps else \
+            next(iter(steps))
+        head = steps[head_name]
+        peak = head.get("peak_memory_bytes") or 0
+        row = {
+            "arch": arch, "shape": shape, "mesh": mesh,
+            "mapping": rec.get("mapping") or "-",
+            "n_workers": rec.get("n_workers") or "-",
+            "compute_s": rec["terms_s"]["compute"],
+            "memory_s": rec["terms_s"]["memory"],
+            "collective_s": rec["terms_s"]["collective"],
+            "dominant": rec["dominant"],
+            "useful_ratio": rec.get("useful_ratio", 0.0),
+            "peak_gb": peak / 1e9,
+            "fits_hbm": peak <= HBM_PER_CHIP,
+        }
+        if "amortized" in rec:
+            row["amortized_dominant"] = rec["amortized"]["dominant"]
+        out.append(row)
+    return out
+
+
+def main(quick: bool = True, path: str = "benchmarks/results/dryrun.json"):
+    if not os.path.exists(path):
+        print(f"(roofline) no dry-run cache at {path}; run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    rs = rows(load(path))
+    cols = ["arch", "shape", "mesh", "mapping", "dominant", "compute_s",
+            "memory_s", "collective_s", "useful_ratio", "peak_gb", "fits_hbm"]
+    print("# Roofline table (per chip, v5e constants; decode/prefill = one "
+          "serve step, train = global-sync step)")
+    print(",".join(cols))
+    for r in rs:
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    doms = {}
+    for r in rs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print("dominant-term histogram:", doms)
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark entrypoint — one function per paper table/figure.
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark (the
+per-benchmark detail CSVs print above each summary).  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks import (fig3_sandwich, fig3c_grouping, fig_e4_participation,
+                        fig_e8_multilevel, roofline_table, table1_bounds,
+                        table2_time_to_acc)
+
+BENCHES = [
+    ("table1_bounds", table1_bounds.main),
+    ("fig3_sandwich", fig3_sandwich.main),
+    ("fig3c_grouping", fig3c_grouping.main),
+    ("table2_time_to_acc", table2_time_to_acc.main),
+    ("fig_e8_multilevel", fig_e8_multilevel.main),
+    ("fig_e4_participation", fig_e4_participation.main),
+    ("roofline_table", roofline_table.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer runs / more seeds")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    summary = []
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        derived = fn(quick=not args.full)
+        us = (time.time() - t0) * 1e6
+        summary.append((name, us, derived))
+
+    print("\n# summary")
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        d = json.dumps(derived, default=str)[:160].replace(",", ";")
+        print(f"{name},{us:.0f},{d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: two-level H-SGD on a non-IID problem in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import HSGD, UniformTopology, two_level
+from repro.data import FederatedDataset, label_shard_partition, make_classification
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import sgd
+
+# 8 workers, each holding ONE class of a 8-class problem (maximally non-IID)
+x, y = make_classification(seed=0, num_classes=8, dim=24, per_class=80)
+ds = FederatedDataset(x, y, label_shard_partition(y, [[j] for j in range(8)]))
+
+model = SimpleModel(SimpleConfig(kind="mlp", input_dim=24, hidden=32,
+                                 num_classes=8))
+
+# H-SGD: 2 groups x 4 workers; local aggregation every I=4 steps (cheap,
+# within a group), global aggregation every G=16 steps (expensive)
+engine = HSGD(model.loss, sgd(0.08), UniformTopology(two_level(8, 2, G=16, I=4)))
+state = engine.init(jax.random.PRNGKey(0), model.init)
+
+gb = jax.tree.map(jnp.asarray, ds.global_batch())
+for t in range(96):
+    state, metrics = engine.step(state, jax.tree.map(jnp.asarray, ds.batch(t, 10)))
+    if (t + 1) % 16 == 0:  # w-bar is observable at global boundaries
+        wbar = engine.mean_params(state)
+        print(f"step {t+1:3d}  sync=level-{engine.topology.step_kind(t)[1]}  "
+              f"global loss {float(model.loss(wbar, gb)[0]):.4f}  "
+              f"acc {float(model.accuracy(wbar, gb)):.3f}")

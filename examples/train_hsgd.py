@@ -1,0 +1,19 @@
+"""End-to-end driver example: H-SGD-train a reduced qwen2-family LM on the
+synthetic token stream, with checkpointing and divergence telemetry.
+
+    PYTHONPATH=src python examples/train_hsgd.py
+
+(The full-size run is the same command without --reduced on a TPU fleet.)
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "qwen2-0.5b", "--reduced",
+        "--workers", "8", "--groups", "2", "--G", "8", "--I", "2",
+        "--steps", "120", "--batch", "4", "--seq", "64",
+        "--lr", "3e-3", "--optimizer", "momentum",
+        "--log-every", "10", "--divergence-every", "40",
+        "--ckpt-dir", "/tmp/hsgd_ckpt", "--ckpt-every", "60",
+        "--out", "/tmp/hsgd_history.json",
+    ])

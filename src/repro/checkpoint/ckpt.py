@@ -1,0 +1,74 @@
+"""Pytree checkpointing: msgpack container + raw numpy buffers.
+
+Atomic (write to tmp + rename), step-indexed, restores onto a pytree template.
+bfloat16 leaves round-trip via a uint16 view (no numpy wire format).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = np.dtype(jnp.bfloat16)
+
+
+def _to_wire(leaf) -> np.ndarray:
+    a = np.asarray(leaf)
+    return a.view(np.uint16) if a.dtype == _BF16 else a
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves = jax.tree.leaves(tree)
+    payload = []
+    for l in leaves:
+        a = _to_wire(l)
+        payload.append({
+            "dtype": str(np.dtype(jnp.result_type(l))),
+            "wire": str(a.dtype),
+            "shape": list(a.shape),
+            "data": np.ascontiguousarray(a).tobytes(),
+        })
+    blob = msgpack.packb({"step": step, "payload": payload}, use_bin_type=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    fd, tmp = tempfile.mkstemp(dir=path)
+    with os.fdopen(fd, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, fname)
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".msgpack")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, template: Any, step: Optional[int] = None):
+    """Returns (step, tree shaped/dtyped like template)."""
+    if step is None:
+        step = latest_step(path)
+        assert step is not None, f"no checkpoints under {path}"
+    with open(os.path.join(path, f"ckpt_{step:08d}.msgpack"), "rb") as f:
+        blob = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(template)
+    stored = blob["payload"]
+    assert len(stored) == len(leaves), "checkpoint/template structure mismatch"
+    out = []
+    for tmpl, rec in zip(leaves, stored):
+        arr = np.frombuffer(rec["data"],
+                            dtype=np.dtype(rec["wire"])).reshape(rec["shape"])
+        want = np.dtype(rec["dtype"])
+        if want == _BF16:
+            arr = arr.view(_BF16)
+        arr = jnp.asarray(arr, dtype=want)
+        assert arr.shape == tuple(np.shape(tmpl)), (arr.shape, np.shape(tmpl))
+        out.append(arr)
+    return blob["step"], jax.tree.unflatten(treedef, out)

@@ -1,0 +1,27 @@
+"""The paper's primary contribution: hierarchical SGD as a composable
+JAX training feature (engine, topologies, groupings, divergences, bounds)."""
+from repro.core.divergence import (all_divergences, downward_divergence_avg,
+                                   downward_divergences, flatten_pytree_batch,
+                                   global_divergence, partition_residual,
+                                   per_worker_grads, upward_divergence)
+from repro.core.grouping import (Grouping, contiguous, diversity_grouping,
+                                 group_iid, group_noniid, random_grouping,
+                                 sample_participation)
+from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
+from repro.core.planner import (CommModel, PlanPoint, best_under_budget,
+                                enumerate_plans, fastest_under_bound,
+                                pareto_front)
+from repro.core.hsgd import (HSGD, GroupedTopology, HSGDState, UniformTopology,
+                             run)
+
+__all__ = [
+    "HSGD", "HSGDState", "GroupedTopology", "UniformTopology", "run",
+    "HierarchySpec", "local_sgd", "two_level",
+    "CommModel", "PlanPoint", "best_under_budget", "enumerate_plans",
+    "fastest_under_bound", "pareto_front",
+    "Grouping", "contiguous", "group_iid", "group_noniid", "random_grouping",
+    "sample_participation", "diversity_grouping",
+    "all_divergences", "downward_divergence_avg", "downward_divergences",
+    "flatten_pytree_batch", "global_divergence", "partition_residual",
+    "per_worker_grads", "upward_divergence",
+]

@@ -1,0 +1,83 @@
+"""Upward / downward / global gradient divergences (paper Assumptions 1c/1d/2,
+partition identity eq. (10), and Lemma 1/2 empirical expectations).
+
+All functions take per-worker gradients evaluated at a COMMON point w
+(that is how the paper defines divergence), stacked as (n, dim) float arrays
+(pytrees are flattened by the caller or via ``stack_grads``).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grouping import Grouping
+
+
+def flatten_pytree_batch(grads) -> jnp.ndarray:
+    """pytree with leading worker dim -> (n, dim)."""
+    leaves = [jnp.reshape(l, (l.shape[0], -1)) for l in jax.tree.leaves(grads)]
+    return jnp.concatenate(leaves, axis=1)
+
+
+def global_divergence(g: jnp.ndarray) -> jnp.ndarray:
+    """(1/n) sum_j ||g_j - mean||^2  — Assumption 2's LHS."""
+    mean = g.mean(0)
+    return jnp.mean(jnp.sum((g - mean) ** 2, axis=1))
+
+
+def group_means(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
+    oh = jnp.asarray(grouping.onehot(), g.dtype)           # (N, n)
+    sums = oh @ g                                          # (N, dim)
+    return sums / jnp.asarray(grouping.sizes, g.dtype)[:, None]
+
+
+def upward_divergence(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
+    """sum_i (n_i/n) ||grad f_i - grad f||^2 — Assumption 1c's LHS.
+    grad f is the n_i/n-weighted mean (paper eq. (2))."""
+    gm = group_means(g, grouping)                          # (N, dim)
+    w = jnp.asarray(grouping.sizes, g.dtype) / grouping.n  # (N,)
+    gbar = (w[:, None] * gm).sum(0)
+    return jnp.sum(w * jnp.sum((gm - gbar) ** 2, axis=1))
+
+
+def downward_divergences(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
+    """per-group (1/n_i) sum_{j in V_i} ||g_j - grad f_i||^2 — Assumption 1d."""
+    gm = group_means(g, grouping)                          # (N, dim)
+    a = np.asarray(grouping.assignment)
+    diffs = jnp.sum((g - gm[a]) ** 2, axis=1)              # (n,)
+    oh = jnp.asarray(grouping.onehot(), g.dtype)
+    return (oh @ diffs) / jnp.asarray(grouping.sizes, g.dtype)
+
+
+def downward_divergence_avg(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
+    """sum_i (n_i/n) * eps_i^2-term = (1/n) sum_i sum_{j in V_i} ||.||^2."""
+    w = jnp.asarray(grouping.sizes, g.dtype) / grouping.n
+    return jnp.sum(w * downward_divergences(g, grouping))
+
+
+def partition_residual(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
+    """eq. (10): global = upward + weighted downward (exact for uniform
+    weights; returns the residual so tests can assert ~0)."""
+    return (global_divergence(g)
+            - upward_divergence(g, grouping)
+            - downward_divergence_avg(g, grouping))
+
+
+def all_divergences(g: jnp.ndarray, grouping: Grouping) -> Dict[str, float]:
+    return {
+        "global": float(global_divergence(g)),
+        "upward": float(upward_divergence(g, grouping)),
+        "downward_avg": float(downward_divergence_avg(g, grouping)),
+        "downward_max": float(downward_divergences(g, grouping).max()),
+    }
+
+
+def per_worker_grads(loss_fn, params, batches) -> jnp.ndarray:
+    """Gradients of every worker's loss at a COMMON params point.
+    batches: pytree with leading worker dim.  Returns (n, dim)."""
+    gfn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+    grads = jax.vmap(gfn, in_axes=(None, 0))(params, batches)
+    return flatten_pytree_batch(grads)

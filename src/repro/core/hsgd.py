@@ -1,0 +1,309 @@
+"""The H-SGD engine (paper Algorithm 1 and multi-level Algorithm D.1).
+
+State layout: every worker owns a full model replica; ``params`` and
+``opt_state`` carry a leading worker axis of size n.  One engine serves both
+execution modes:
+
+* sim  — n = tens..hundreds of CPU "workers"; used for the paper-experiment
+  reproduction.  Aggregations are reshapes/means (uniform hierarchy) or
+  mixing-matrix products (arbitrary fixed groupings, Theorem 1).
+* mesh — n = product of replica mesh axes; the SAME code, but params are
+  sharded ``P(('pod','data'), ...)`` so the level-ℓ mean lowers to an
+  all-reduce over exactly the mesh axes of levels >= ℓ (local sync = intra-pod
+  ICI; global sync additionally crosses the pod axis).
+
+Because the periods are static, each distinct step kind (pure-local,
+sync@level-ℓ, partial group sync) is its own jitted function — no lax.cond
+around collectives, so the lowered HLO per step kind is exact (the roofline
+reads it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grouping import Grouping
+from repro.core.hierarchy import HierarchySpec
+from repro.optim.optimizers import Optimizer
+
+
+# ---------------------------------------------------------------------------
+# topologies
+# ---------------------------------------------------------------------------
+class UniformTopology:
+    """Uniform multi-level hierarchy (HierarchySpec); reshape-based means.
+    Works identically in sim and mesh mode.
+
+    sync_dtype: dtype of the aggregation payload.  float32 (default) is the
+    exact paper semantics; 'bfloat16' halves the collective bytes of every
+    sync (a beyond-paper §Perf option — the paper calls compression
+    orthogonal, we make it a first-class switch)."""
+
+    def __init__(self, spec: HierarchySpec, sync_dtype: str = "float32"):
+        self.spec = spec
+        self.n = spec.n_workers
+        self.periods = spec.periods
+        self.sync_dtype = sync_dtype
+
+    def step_kind(self, t: int) -> Optional[Tuple[str, int]]:
+        lvl = self.spec.sync_level(t)
+        return None if lvl is None else ("level", lvl)
+
+    def aggregate(self, tree, kind, mask: Optional[jax.Array] = None) -> Any:
+        """mask (n,) float/bool: partial worker participation (paper App. E
+        experiments / stated future work) — the level-ℓ mean runs over the
+        participating workers only; everyone receives the result."""
+        _, lvl = kind
+        gs = self.spec.group_sizes
+        m = len(gs)
+        acc = jnp.dtype(self.sync_dtype)
+
+        def agg(x):
+            shaped = x.reshape(gs + x.shape[1:])
+            axes = tuple(range(lvl - 1, m))
+            if mask is None:
+                # dtype=acc pins the ACCUMULATION dtype: without it jnp.mean
+                # upcasts bf16 sums to f32 and the sync all-reduce payload
+                # stays f32 (measured in §Perf)
+                mean = shaped.astype(acc).mean(axis=axes, keepdims=True,
+                                               dtype=acc).astype(x.dtype)
+            else:
+                w = mask.astype(acc).reshape(gs + (1,) * (shaped.ndim - m))
+                num = (shaped.astype(acc) * w).sum(axis=axes, keepdims=True,
+                                                   dtype=acc)
+                den = jnp.maximum(w.sum(axis=axes, keepdims=True, dtype=acc),
+                                  1e-9)
+                mean = (num / den).astype(x.dtype)
+            return jnp.broadcast_to(mean, shaped.shape).reshape(x.shape)
+
+        return jax.tree.map(agg, tree)
+
+
+class GroupedTopology:
+    """Two-level H-SGD with an explicit (possibly non-uniform) Grouping and
+    per-group local periods I_i (Theorem 1's most general setting)."""
+
+    def __init__(self, grouping: Grouping, G: int,
+                 I: Union[int, Tuple[int, ...]]):
+        self.grouping = grouping
+        self.n = grouping.n
+        self.G = G
+        self.I = tuple([I] * grouping.N) if isinstance(I, int) else tuple(I)
+        assert len(self.I) == grouping.N
+        for Ii in self.I:
+            assert G % Ii == 0, (G, Ii)
+        self.periods = (G, min(self.I))
+        self._A_loc = np.asarray(grouping.local_matrix())
+        self._A_glob = np.asarray(grouping.global_matrix())
+
+    def step_kind(self, t: int):
+        if (t + 1) % self.G == 0:
+            return ("global",)
+        mask = tuple(bool((t + 1) % Ii == 0) for Ii in self.I)
+        return ("groups", mask) if any(mask) else None
+
+    def _matrix(self, kind) -> np.ndarray:
+        if kind[0] == "global":
+            return self._A_glob
+        mask = np.asarray(kind[1])
+        a = np.asarray(self.grouping.assignment)
+        keep = mask[a]                      # workers whose group syncs now
+        A = np.where(keep[:, None], self._A_loc, np.eye(self.n))
+        return A
+
+    def aggregate(self, tree, kind, mask: Optional[jax.Array] = None):
+        if mask is None:
+            A = jnp.asarray(self._matrix(kind), jnp.float32)
+
+            def agg(x):
+                flat = x.reshape(self.n, -1).astype(jnp.float32)
+                out = A @ flat
+                return out.astype(x.dtype).reshape(x.shape)
+
+            return jax.tree.map(agg, tree)
+        # partial participation: group means over participants, distributed
+        # to every member of a syncing group (Algorithm 1 semantics)
+        oh = jnp.asarray(self.grouping.onehot(), jnp.float32)      # (N, n)
+        a = np.asarray(self.grouping.assignment)
+        if kind[0] == "global":
+            syncing = np.ones(self.grouping.N, bool)
+        else:
+            syncing = np.asarray(kind[1])
+        wm = mask.astype(jnp.float32)
+
+        def agg(x):
+            flat = x.reshape(self.n, -1).astype(jnp.float32)
+            num = oh @ (wm[:, None] * flat)                        # (N, dim)
+            den = jnp.maximum(oh @ wm, 1e-9)[:, None]
+            gm = num / den
+            if kind[0] == "global":
+                val = jnp.broadcast_to(gm.mean(0, keepdims=True),
+                                       (self.n, flat.shape[1]))
+            else:
+                val = gm[a]
+            out = jnp.where(jnp.asarray(syncing[a])[:, None], val, flat)
+            return out.astype(x.dtype).reshape(x.shape)
+
+        return jax.tree.map(agg, tree)
+
+
+Topology = Union[UniformTopology, GroupedTopology]
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HSGDState:
+    params: Any      # leading worker axis n
+    opt_state: Any   # leading worker axis n
+    step: jax.Array  # scalar int32
+
+
+class HSGD:
+    """loss_fn(params, batch) -> (loss, metrics-dict). Batch passed to
+    ``step`` must carry a leading worker axis of size n."""
+
+    def __init__(self, loss_fn: Callable, optimizer: Optimizer,
+                 topology: Topology, *, aggregate_opt_state: bool = True,
+                 jit: bool = True, accum_steps: int = 1):
+        """accum_steps > 1: each H-SGD iteration accumulates gradients over
+        that many microbatches (scan) before the single optimizer update —
+        same semantics as one large-batch step (SGD is linear in the
+        gradient; tested), peak activation memory divided by accum_steps."""
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.topology = topology
+        self.aggregate_opt_state = aggregate_opt_state
+        self._jit = jit
+        self.accum_steps = accum_steps
+        self._step_fns: Dict[Any, Callable] = {}
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key, model_init: Callable[[jax.Array], Any]) -> HSGDState:
+        """All workers start from the SAME w̄^0 (paper input)."""
+        params0 = model_init(key)
+        n = self.topology.n
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params0)
+        opt0 = self.optimizer.init(params0)
+        opt_state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), opt0)
+        return HSGDState(params, opt_state, jnp.zeros((), jnp.int32))
+
+    # -- one combined step per kind ------------------------------------------
+    def _build_step(self, kind, masked: bool = False):
+        grad_fn = jax.grad(lambda p, b: self.loss_fn(p, b), has_aux=True)
+        accum = self.accum_steps
+
+        def mean_grads(params, batch):
+            if accum == 1:
+                return grad_fn(params, batch)
+
+            def micro(acc, mb):
+                g, m = grad_fn(params, mb)
+                return jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            gsum, ms = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(
+                lambda g, p: (g / accum).astype(p.dtype), gsum, params)
+            return grads, jax.tree.map(lambda m: m.mean(0), ms)
+
+        def local_update(params, opt_state, batch):
+            grads, metrics = mean_grads(params, batch)
+            updates, opt_state = self.optimizer.update(grads, opt_state, params)
+            params = jax.tree.map(jnp.add, params, updates)
+            return params, opt_state, metrics
+
+        def apply_mask(new, old, mask):
+            """Non-participating workers keep their previous state."""
+            def sel(a, b):
+                m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+                return jnp.where(m, a, b)
+            return jax.tree.map(sel, new, old)
+
+        def step(state: HSGDState, batch, mask=None) -> Tuple[HSGDState, Dict]:
+            params, opt_state, metrics = jax.vmap(local_update)(
+                state.params, state.opt_state, batch)
+            if masked:
+                params = apply_mask(params, state.params, mask)
+                opt_state = apply_mask(opt_state, state.opt_state, mask)
+            if kind is not None:
+                amask = mask if masked else None
+                params = self.topology.aggregate(params, kind, mask=amask)
+                if self.aggregate_opt_state:
+                    # average optimizer moments with the same schedule as the
+                    # params (paper's SGD has none; momentum/adam extension)
+                    agg = self.topology.aggregate(_moments_only(opt_state),
+                                                  kind, mask=amask)
+                    opt_state = _merge_moments(opt_state, agg)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+            return HSGDState(params, opt_state, state.step + 1), metrics
+
+        if not self._jit:
+            return step
+        return jax.jit(step, donate_argnums=0) if masked else \
+            jax.jit(lambda s, b: step(s, b), donate_argnums=0)
+
+    def step_fn(self, kind, masked: bool = False):
+        key = (kind, masked)
+        if key not in self._step_fns:
+            self._step_fns[key] = self._build_step(kind, masked)
+        return self._step_fns[key]
+
+    def step(self, state: HSGDState, batch,
+             mask=None) -> Tuple[HSGDState, Dict]:
+        """mask: optional (n,) bool — partial worker participation (held
+        fixed by the caller within a round, re-drawn per round)."""
+        kind = self.topology.step_kind(int(state.step))
+        if mask is None:
+            return self.step_fn(kind)(state, batch)
+        return self.step_fn(kind, masked=True)(state, batch, jnp.asarray(mask))
+
+    # -- inspection ------------------------------------------------------------
+    def mean_params(self, state: HSGDState):
+        """w̄^t (the analysis object; observable only at t = aG)."""
+        return jax.tree.map(
+            lambda x: x.mean(0, dtype=jnp.float32).astype(x.dtype), state.params)
+
+    def worker_params(self, state: HSGDState, j: int):
+        return jax.tree.map(lambda x: x[j], state.params)
+
+
+def _moments_only(opt_state):
+    return {k: v for k, v in opt_state.items() if k in ("m", "v")}
+
+
+def _merge_moments(opt_state, agg):
+    out = dict(opt_state)
+    out.update(agg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# convenience: run T steps with a data source
+# ---------------------------------------------------------------------------
+def run(engine: HSGD, state: HSGDState, batch_fn: Callable[[int], Any],
+        T: int, eval_every: int = 0,
+        eval_fn: Optional[Callable[[HSGDState, int], Dict]] = None):
+    """batch_fn(t) -> batch with leading worker axis. Returns (state, history)."""
+    history = []
+    for t in range(T):
+        state, metrics = engine.step(state, batch_fn(t))
+        if eval_every and (t + 1) % eval_every == 0 and eval_fn is not None:
+            rec = {"t": t + 1, **{k: float(v) for k, v in metrics.items()}}
+            rec.update(eval_fn(state, t))
+            history.append(rec)
+    return state, history

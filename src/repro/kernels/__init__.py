@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, rglru_scan, ssd_scan
+
+__all__ = ["flash_attention", "rglru_scan", "ssd_scan"]

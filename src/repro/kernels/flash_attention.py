@@ -1,0 +1,131 @@
+"""Blocked online-softmax attention (flash-attention style) for TPU.
+
+TPU adaptation notes (vs the CUDA original): tiles live in VMEM and are sized
+for the 128-lane MXU (block_q/block_k multiples of 128 in production; tests
+sweep smaller blocks in interpret mode).  The kernel keeps running max / sum /
+accumulator in VMEM scratch across the k-block grid dimension (TPU grids
+iterate the minor dimension sequentially, which substitutes for the CUDA
+softmax-rescaling loop).  Supports causal masking, sliding windows (for the
+gemma3 / mixtral / recurrentgemma 'local' layers) and GQA via q-head ->
+kv-head index mapping (no materialized repeat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 block_q: int, block_k: int, nk: int, sk_valid: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                      # (bk, d)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (bq, bk)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = kpos < sk_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                                    # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                            # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                        # (bq, 1)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hk, D), Hq % Hk == 0.
+    Returns (B, Sq, Hq, D). Sequences are padded to block multiples here."""
+    b, sq, hq, d = q.shape
+    _, sk, hk, _ = k.shape
+    assert hq % hk == 0
+    group = hq // hk
+    scale = 1.0 / np.sqrt(d)
+
+    sq_p = -(-sq // block_q) * block_q
+    sk_p = -(-sk // block_k) * block_k
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+
+    qt = q.transpose(0, 2, 1, 3)                           # (B, Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                           # (B, Hk, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    nq = sq_p // block_q
+    nk = sk_p // block_k
+    grid = (b, hq, nq, nk)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk, sk_valid=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, iq, ik: (bb, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, iq, ik: (bb, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, h, iq, ik: (bb, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, h, iq, ik: (bb, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    out = out.transpose(0, 2, 1, 3)                        # (B, Sq, Hq, D)
+    return out[:, :sq]

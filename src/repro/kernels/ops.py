@@ -1,0 +1,52 @@
+"""Public kernel entry points.
+
+Auto-select ``interpret=True`` off-TPU so the same call sites work in CPU
+tests (interpret mode executes the kernel body in Python) and compile to real
+Mosaic kernels on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+@functools.cache
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    # interpret mode is slow; shrink blocks so CPU tests stay fast
+    if interpret:
+        block_q = min(block_q, 32)
+        block_k = min(block_k, 32)
+    return _flash(q, k, v, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64,
+             interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret:
+        chunk = min(chunk, 16)
+    return _ssd(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+def rglru_scan(a, b, *, block: int = 128, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret:
+        block = min(block, 32)
+    return _rglru(a, b, block=block, interpret=interpret)

@@ -1,0 +1,69 @@
+"""RG-LRU linear recurrence (RecurrentGemma/Griffin) as a Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t over the sequence, per channel.  TPU adaptation:
+the sequence is tiled into blocks; the carry h lives in VMEM scratch across
+the sequential block grid dimension, and *within* a block the recurrence is
+evaluated in log-space prefix form (cumprod of a via cumsum of log a) so the
+inner loop is vector ops, not a Python-level scan — the VPU-friendly analogue
+of the GPU's warp-parallel associative scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-30
+
+
+def _rglru_kernel(loga_ref, b_ref, y_ref, h_scr, *, block: int):
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    log_a = loga_ref[0].astype(jnp.float32)   # (Q, W), <= 0
+    b = b_ref[0].astype(jnp.float32)          # (Q, W)
+
+    # prefix products A_t = prod_{j<=t} a_j  via cumsum in log space
+    cuml = jnp.cumsum(log_a, axis=0)          # (Q, W)
+    At = jnp.exp(cuml)
+    # h_t = A_t * (h0 + sum_{j<=t} b_j / A_j); guard tiny A_j by clamping the
+    # log-prefix (a_j in (0,1), so A_j decays — clamp keeps this stable for
+    # the block sizes used; exactness is asserted against the jnp oracle)
+    inv = jnp.exp(-jnp.maximum(cuml, jnp.log(_EPS)))
+    contrib = jnp.cumsum(b * inv, axis=0)
+    h0 = h_scr[...]                           # (1, W)
+    hs = At * (h0 + contrib)
+    y_ref[0] = hs.astype(y_ref.dtype)
+    h_scr[...] = hs[-1:]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, *, block: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """a, b: (Bt, S, W), 0 < a < 1.  Returns h: (Bt, S, W)."""
+    bt, s, w = a.shape
+    s_p = -(-s // block) * block
+    log_a = jnp.log(jnp.maximum(a.astype(jnp.float32), _EPS))
+    if s_p != s:
+        log_a = jnp.pad(log_a, ((0, 0), (0, s_p - s), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, s_p - s), (0, 0)))
+    nb = s_p // block
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, block=block),
+        grid=(bt, nb),
+        in_specs=[
+            pl.BlockSpec((1, block, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block, w), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, w), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, s_p, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b)
+    return out[:, :s]

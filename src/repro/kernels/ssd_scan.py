@@ -1,0 +1,89 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation: the chunk-local "dual" quadratic form runs on the MXU
+(chunk x chunk matmuls); the inter-chunk state (H, P, N) is carried in VMEM
+scratch across the sequential chunk grid dimension — the TPU analogue of the
+paper's warp-level chunk recurrence on GPU.  One grid cell = (batch, chunk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)       # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)     # (Q, H)
+    A = a_ref[...].astype(jnp.float32)     # (H,)
+    B = b_ref[0].astype(jnp.float32)       # (Q, N)
+    C = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    dA = dt * A                            # (Q, H), negative
+    cum = jnp.cumsum(dA, axis=0)           # (Q, H)
+
+    # intra-chunk dual form
+    lt = cum[:, None, :] - cum[None, :, :]                 # (Qi, Qj, H)
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(causal[..., None], lt, -jnp.inf))
+    g = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Qi, Qj)
+    m = g[..., None] * decay * dt[None, :, :]              # (Qi, Qj, H)
+    y_intra = jnp.einsum("ijh,jhp->ihp", m, x)
+
+    # inter-chunk contribution from the carried state
+    state = state_scr[...]                                 # (H, P, N)
+    y_inter = jnp.einsum("in,ih,hpn->ihp", C, jnp.exp(cum), state)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update for the next chunk
+    rev = jnp.exp(cum[-1][None, :] - cum)                  # (Q, H)
+    upd = jnp.einsum("jh,jn,jhp->hpn", dt * rev, B, x)
+    state_scr[...] = state * jnp.exp(cum[-1])[:, None, None] + upd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 64,
+             interpret: bool = False) -> jax.Array:
+    """x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B, C: (Bt, S, N).
+    Returns y: (Bt, S, H, P).  S is padded to a chunk multiple here."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    s_p = -(-s // chunk) * chunk
+    if s_p != s:
+        x = jnp.pad(x, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, s_p - s), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, s_p - s), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, s_p - s), (0, 0)))
+    nc = s_p // chunk
+    grid = (bt, nc)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((h,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, h, p), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, s_p, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return out[:, :s]

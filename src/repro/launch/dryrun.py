@@ -1,0 +1,332 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+MUST set the host-device override before ANY other import (jax locks the
+device count at first init).
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.configs.base import InputShape, ModelConfig  # noqa: E402
+from repro.core import HSGD, HierarchySpec, UniformTopology  # noqa: E402
+from repro.models import build_model, decode_state_specs, train_batch_specs  # noqa: E402
+from repro.models.frontends import audio_frame_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_replicas  # noqa: E402
+from repro.launch.partitioning import (batch_shardings, cache_shardings,  # noqa: E402
+                                       params_shardings, replicated)
+from repro.optim import sgd  # noqa: E402
+from repro.roofline import analyze_compiled, combine_train_steps  # noqa: E402
+
+# H-SGD periods used for the production roofline (representative of the
+# paper's CIFAR sweet spot G=50, I=5 scaled to round powers of two)
+HSGD_G, HSGD_I = 64, 8
+
+# long_500k only for sub-quadratic archs (see DESIGN.md shape-skip table)
+LONG_OK = {"gemma3-12b", "recurrentgemma-2b", "mamba2-130m", "mixtral-8x22b"}
+
+
+def applicable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+def _worker_batch_specs(cfg: ModelConfig, shape: InputShape, n: int) -> Dict:
+    """Global batch -> (n_workers, per_worker, ...) ShapeDtypeStructs."""
+    g = train_batch_specs(cfg, shape)
+    assert shape.global_batch % n == 0, (shape.global_batch, n)
+
+    def reshape(s):
+        return jax.ShapeDtypeStruct((n, s.shape[0] // n) + s.shape[1:], s.dtype)
+
+    return jax.tree.map(reshape, g)
+
+
+def _state_specs(model, opt, n: int):
+    p0 = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    o0 = jax.eval_shape(opt.init, p0)
+    lead = lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+    return (jax.tree.map(lead, p0), jax.tree.map(lead, o0))
+
+
+REPLICA_HBM_BUDGET = 8e9  # bytes/chip for one worker's param shard
+
+
+def train_plan(cfg: ModelConfig, mesh) -> Dict:
+    """Choose the H-SGD worker<->mesh mapping by replica memory.
+
+    'replica' (default): every (pod, data) index is a worker — n=32 full
+      replicas (multi-pod), params sharded only on 'model' within a worker.
+    'fsdp': for archs whose replica does not fit HBM at n=replica density
+      (nemotron-340b, mixtral-8x22b): workers = pods only (n=2), the 'data'
+      axis becomes intra-worker batch parallelism + FSDP param sharding.
+      Single-pod fsdp degenerates to n=1 (H-SGD needs >=2 pods at this
+      scale — recorded in DESIGN.md).
+    """
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    multi = "pod" in mesh.axis_names
+    n_dense = (mesh.shape["pod"] * mesh.shape["data"]) if multi \
+        else mesh.shape["data"]
+    bytes_per_param = 2 if cfg.param_dtype == "bfloat16" else 4
+    per_chip_dense = cfg.param_count() * bytes_per_param * n_dense / n_chips
+    if per_chip_dense <= REPLICA_HBM_BUDGET:
+        if multi:
+            spec = HierarchySpec((mesh.shape["pod"], mesh.shape["data"]),
+                                 (HSGD_G, HSGD_I))
+            lead = ("pod", "data")
+        else:
+            d = mesh.shape["data"]
+            spec = HierarchySpec((4, d // 4), (HSGD_G, HSGD_I))
+            lead = ("data",)
+        return {"mapping": "replica", "spec": spec, "lead": lead,
+                "fsdp_axis": None, "data_axis": None}
+    if multi:
+        spec = HierarchySpec((mesh.shape["pod"],), (HSGD_G,))
+        lead = ("pod",)
+    else:
+        spec = HierarchySpec((1,), (HSGD_G,))
+        lead = ()
+    return {"mapping": "fsdp", "spec": spec, "lead": lead,
+            "fsdp_axis": "data", "data_axis": "data"}
+
+
+# ---------------------------------------------------------------------------
+# lowerings per shape kind
+# ---------------------------------------------------------------------------
+def lower_train(cfg: ModelConfig, shape: InputShape, mesh,
+                kinds=("local", "local_sync", "global_sync"), *,
+                sync_dtype: str = "float32",
+                model_shard: bool = True,
+                seq_axis: Optional[str] = None,
+                accum_steps: int = 1,
+                levels: int = 2):
+    """sync_dtype / model_shard / seq_axis / accum_steps are §Perf hillclimb
+    knobs: bf16 aggregation payloads, DP-only parameter layout (replicate
+    weights within a worker), sequence sharding of the batch over an axis,
+    and microbatch gradient accumulation.  levels=3 lowers a THREE-level
+    hierarchy (Algorithm D.1) on the multi-pod mesh: pods / data-quadrants /
+    workers with nested periods (G, G/4, I)."""
+    model = build_model(cfg)
+    opt = sgd(1e-3)
+    plan = train_plan(cfg, mesh)
+    if levels == 3:
+        assert plan["mapping"] == "replica" and "pod" in mesh.axis_names, \
+            "3-level demo needs the replica mapping on the multi-pod mesh"
+        d = mesh.shape["data"]
+        plan["spec"] = HierarchySpec(
+            (mesh.shape["pod"], 4, d // 4), (HSGD_G, HSGD_G // 4, HSGD_I))
+    spec: HierarchySpec = plan["spec"]
+    n = spec.n_workers
+    topo = UniformTopology(spec, sync_dtype=sync_dtype)
+    eng = HSGD(model.loss, opt, topo, jit=False, accum_steps=accum_steps)
+
+    p_spec, o_spec = _state_specs(model, opt, n)
+    from repro.core.hsgd import HSGDState
+    state_spec = HSGDState(p_spec, o_spec, jax.ShapeDtypeStruct((), jnp.int32))
+    batch_spec = _worker_batch_specs(cfg, shape, n)
+
+    lead = plan["lead"]
+    state_sh = HSGDState(
+        params=params_shardings(mesh, p_spec, lead_worker=lead,
+                                fsdp_axis=plan["fsdp_axis"],
+                                model_shard=model_shard),
+        opt_state=params_shardings(mesh, o_spec, lead_worker=lead,
+                                   fsdp_axis=plan["fsdp_axis"],
+                                   model_shard=model_shard),
+        step=NamedSharding(mesh, P()))
+    batch_sh = batch_shardings(mesh, batch_spec, lead_worker=lead,
+                               data_axis=plan["data_axis"])
+    if seq_axis is not None:
+        def reshard(sh):
+            entries = list(sh.spec) + [None] * 3
+            entries[2] = seq_axis
+            return NamedSharding(mesh, P(*entries[:3]))
+        batch_sh = jax.tree.map(reshard, batch_sh)
+
+    # M=1 hierarchies (fsdp mapping) have no distinct local sync
+    kind_map = {"local": None, "global_sync": ("level", 1)}
+    if spec.num_levels >= 2:
+        kind_map["local_sync"] = ("level", spec.num_levels)
+    if spec.num_levels >= 3:
+        kind_map["mid_sync"] = ("level", 2)
+    out = {}
+    for kname in kinds:
+        if kname not in kind_map:
+            continue
+        step = eng._build_step(kind_map[kname])
+        metrics_sh = None  # let GSPMD place scalars
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh))
+        lowered = fn.lower(state_spec, batch_spec)
+        out[kname] = lowered
+    out["_plan"] = plan
+    return out
+
+
+def lower_prefill(cfg: ModelConfig, shape: InputShape, mesh):
+    model = build_model(cfg)
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                    jnp.int32)
+    p0 = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = params_shardings(mesh, p0, fsdp_axis="data")
+    tok_sh = batch_shardings(mesh, tok_spec)
+    kwargs = {}
+    if cfg.family == "encdec":
+        enc = audio_frame_specs(cfg, shape)
+        kwargs["enc_inputs"] = enc
+        enc_sh = batch_shardings(mesh, enc)
+        fn = jax.jit(
+            lambda p, t, e: model.prefill(p, t, max_len=shape.seq_len,
+                                          enc_inputs=e),
+            in_shardings=(p_sh, tok_sh, enc_sh))
+        return {"prefill": fn.lower(p0, tok_spec, enc)}
+    fn = jax.jit(lambda p, t: model.prefill(p, t, max_len=shape.seq_len),
+                 in_shardings=(p_sh, tok_sh))
+    return {"prefill": fn.lower(p0, tok_spec)}
+
+
+def lower_decode(cfg: ModelConfig, shape: InputShape, mesh):
+    model = build_model(cfg)
+    specs = decode_state_specs(cfg, shape)
+    cache_spec, tok_spec = specs["cache"], specs["token"]
+    p0 = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = params_shardings(mesh, p0, fsdp_axis="data")
+    c_sh = cache_shardings(mesh, cache_spec, shape.global_batch)
+    n_rep = n_replicas(mesh)
+    rep = tuple(a for a in mesh.axis_names if a != "model")
+    tok_sh = NamedSharding(
+        mesh, P(rep if len(rep) > 1 else rep[0])
+        if shape.global_batch % n_rep == 0 else P())
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(p_sh, c_sh, tok_sh),
+                 out_shardings=(None, c_sh))
+    return {"decode": fn.lower(p0, cache_spec, tok_spec)}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = lower_train(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(cfg, shape, mesh)
+    else:
+        lowered = lower_decode(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    plan = lowered.pop("_plan", None)
+
+    reports, mems = {}, {}
+    for kname, low in lowered.items():
+        t1 = time.time()
+        compiled = low.compile()
+        rep = analyze_compiled(f"{arch}/{shape_name}/{kname}", compiled,
+                               pod_size=256)
+        reports[kname] = rep
+        mems[kname] = rep.peak_memory_bytes
+        if verbose:
+            print(f"  [{kname}] compile {time.time()-t1:.1f}s  "
+                  f"flops/chip {rep.flops_per_chip:.3e}  "
+                  f"bytes/chip {rep.bytes_per_chip:.3e}  "
+                  f"coll intra {rep.coll_intra:.3e} cross {rep.coll_cross:.3e}  "
+                  f"peakmem {0 if rep.peak_memory_bytes is None else rep.peak_memory_bytes:.3e}")
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "lower_s": t_lower,
+        "mapping": None if plan is None else plan["mapping"],
+        "n_workers": None if plan is None else plan["spec"].n_workers,
+        "steps": {k: r.asdict() for k, r in reports.items()},
+    }
+    if shape.kind == "train":
+        rec["amortized"] = combine_train_steps(reports, HSGD_G, HSGD_I)
+    # headline report: global_sync for train (worst step), else the only step
+    head = reports.get("global_sync") or next(iter(reports.values()))
+    rec["dominant"] = head.dominant
+    rec["terms_s"] = {"compute": head.compute_s, "memory": head.memory_s,
+                      "collective": head.collective_s}
+    # useful-compute ratio
+    model_flops = model_flops_per_step(cfg, shape)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    hlo = head.flops_per_chip * (1.0 if shape.kind != "train" else 1.0)
+    rec["model_flops_per_chip"] = model_flops / n_chips
+    rec["useful_ratio"] = (model_flops / n_chips) / max(head.flops_per_chip, 1)
+    return rec
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6*N*D for train (fwd+bwd), 2*N*D per generated/processed
+    token at inference. MoE: active params only."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not applicable(arch, shape):
+                continue
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if key in results and not args.force:
+                    print(f"skip (cached): {key}")
+                    continue
+                print(f"=== {key}")
+                try:
+                    rec = run_pair(arch, shape, mp)
+                    results[key] = rec
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((key, str(e)))
+    print(f"\ndone: {len(results)} cached results, {len(failures)} failures")
+    for k, e in failures:
+        print(" FAIL", k, e[:200])
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16) — the 'pod' axis
+carries H-SGD's global aggregation (slow DCI), 'data' the local aggregations
+(fast ICI), 'model' tensor parallelism inside a worker.
+
+Functions, not module constants: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over host devices for CPU integration tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def replica_axes(mesh) -> tuple:
+    """Mesh axes carrying H-SGD worker replicas (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_replicas(mesh) -> int:
+    out = 1
+    for a in replica_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,122 @@
+"""End-to-end H-SGD training driver.
+
+Runs on whatever devices exist (CPU smoke -> TPU pods): builds the model from
+--arch (reduced variant on CPU), an H-SGD topology (--workers/--groups/--G/--I,
+optionally --levels for multi-level), the synthetic token pipeline, and trains
+with periodic checkpointing + divergence telemetry.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --workers 8 --groups 2 --G 8 --I 2 --steps 60 --batch 4 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.configs import get_config, reduced
+from repro.core import (HSGD, HierarchySpec, UniformTopology, per_worker_grads,
+                        all_divergences, contiguous)
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.optim import cosine, momentum, sgd
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale same-family variant")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--G", type=int, default=8)
+    ap.add_argument("--I", type=int, default=2)
+    ap.add_argument("--levels", type=str, default="",
+                    help="multi-level spec 'N1,N2,..:P1,P2,..' (overrides "
+                         "--workers/--groups/--G/--I)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4, help="per-worker batch")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "momentum"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--divergence-every", type=int, default=0)
+    ap.add_argument("--out", default="")
+    return ap
+
+
+def make_spec(args) -> HierarchySpec:
+    if args.levels:
+        sizes, periods = args.levels.split(":")
+        return HierarchySpec(tuple(int(x) for x in sizes.split(",")),
+                             tuple(int(x) for x in periods.split(",")))
+    assert args.workers % args.groups == 0
+    return HierarchySpec((args.groups, args.workers // args.groups),
+                         (args.G, args.I))
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    spec = make_spec(args)
+    n = spec.n_workers
+
+    lr = cosine(args.lr, args.steps, warmup_steps=min(10, args.steps // 10))
+    opt = sgd(lr) if args.optimizer == "sgd" else momentum(lr)
+    eng = HSGD(model.loss, opt, UniformTopology(spec))
+    state = eng.init(jax.random.PRNGKey(args.seed), model.init)
+
+    stream = TokenStream(seed=args.seed, batch=args.batch, seq_len=args.seq,
+                         vocab=cfg.vocab_size, n_workers=n)
+
+    start = 0
+    if args.ckpt_dir:
+        try:
+            start, tree = restore(args.ckpt_dir, {
+                "params": state.params, "opt": state.opt_state})
+            state = state.__class__(tree["params"], tree["opt"],
+                                    jnp.asarray(start, jnp.int32))
+            print(f"resumed from step {start}")
+        except AssertionError:
+            pass
+
+    history = []
+    t0 = time.time()
+    for t in range(start, args.steps):
+        batch = stream(t)
+        state, metrics = eng.step(state, batch)
+        if (t + 1) % args.log_every == 0 or t + 1 == args.steps:
+            rec = {"step": t + 1,
+                   "loss": float(metrics["ce"]),
+                   "lvl": spec.sync_level(t),
+                   "elapsed_s": round(time.time() - t0, 2)}
+            if args.divergence_every and (t + 1) % args.divergence_every == 0:
+                g = per_worker_grads(model.loss, eng.mean_params(state),
+                                     stream(10_000_000 + t))
+                rec["divergence"] = all_divergences(
+                    g, contiguous(n, spec.group_sizes[0]))
+            history.append(rec)
+            print(json.dumps(rec))
+        if args.ckpt_dir and args.ckpt_every and (t + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, t + 1,
+                 {"params": state.params, "opt": state.opt_state})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(history, f, indent=1)
+    return history
+
+
+if __name__ == "__main__":
+    main()

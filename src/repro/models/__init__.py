@@ -1,0 +1,5 @@
+from repro.models.model import build_model, decode_state_specs, input_specs, train_batch_specs
+from repro.models.simple import SimpleConfig, SimpleModel
+
+__all__ = ["build_model", "decode_state_specs", "input_specs",
+           "train_batch_specs", "SimpleConfig", "SimpleModel"]

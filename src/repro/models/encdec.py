@@ -1,0 +1,145 @@
+"""Encoder-decoder backbone (SeamlessM4T family).
+
+The modality frontend is a stub: the encoder consumes precomputed frame
+embeddings (batch, frames, d_model) — see ``repro.models.frontends``.
+Decoder = standard blocks + per-layer cross-attention over encoder memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import (DecoderLM, block_apply, block_cache_init,
+                                      block_decode, block_init, block_prefill)
+
+Params = Dict[str, Any]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.num_encoder_layers > 0
+        self.cfg = cfg
+
+    # ---- init -----------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        emb = (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+               ).astype(cfg.param_dtype)
+        params: Params = {
+            "embed": emb,
+            "final_norm": L.norm_init(cfg.d_model, cfg),
+            "enc_norm": L.norm_init(cfg.d_model, cfg),
+            "lm_head": L.dense_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                    cfg.param_dtype),
+        }
+        enc_keys = jax.random.split(ks[2], cfg.num_encoder_layers)
+        params["enc_units"] = jax.vmap(
+            lambda k: block_init(k, "global", cfg))(enc_keys)
+        dec_keys = jax.random.split(ks[3], cfg.num_layers)
+        params["dec_units"] = jax.vmap(
+            lambda k: block_init(k, "global", cfg, cross=True))(dec_keys)
+        return params
+
+    # ---- encoder ----------------------------------------------------------
+    def encode(self, params: Params, enc_inputs: jax.Array) -> jax.Array:
+        """enc_inputs: (B, F, D) stub frame embeddings -> memory (B, F, D)."""
+        cfg = self.cfg
+        b, f, _ = enc_inputs.shape
+        x = enc_inputs.astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+        full = jnp.ones((f, f), bool)  # bidirectional
+
+        def body(x, p):
+            x, _ = block_apply(p, x, "global", cfg, positions=positions,
+                               self_mask=full)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_units"])
+        return L.apply_norm(params["enc_norm"], x, cfg)
+
+    # ---- training ----------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array,
+                enc_inputs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        memory = self.encode(params, enc_inputs)
+        b, s = tokens.shape
+        x = params["embed"][tokens].astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(x, p):
+            kv = L.attention_kv(p["xattn"], memory, cfg, use_rope=False)
+            x, _ = block_apply(p, x, "global", cfg, positions=positions,
+                               enc_kv=kv)
+            return x, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["dec_units"])
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.forward(params, batch["tokens"], batch["enc_inputs"])
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = batch["targets"]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask", jnp.ones_like(tgt, jnp.float32))
+        ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return ce, {"ce": ce, "moe_aux": aux}
+
+    # ---- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   enc_len: int = 0) -> Params:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        n = cfg.num_layers
+        one = block_cache_init("global", cfg, batch, max_len, dtype)
+        units = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+        enc_len = enc_len or max_len // cfg.encoder_frames_ratio
+        xshape = (n, batch, enc_len, cfg.num_kv_heads, cfg.d_head)
+        units = {**units, "xk": jnp.zeros(xshape, dtype),
+                 "xv": jnp.zeros(xshape, dtype)}
+        return {"units": units, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params: Params, tokens: jax.Array, max_len: int, *,
+                enc_inputs: jax.Array) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        memory = self.encode(params, enc_inputs)
+        b, s = tokens.shape
+        x = params["embed"][tokens].astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(x, p):
+            xk, xv = L.attention_kv(p["xattn"], memory, cfg, use_rope=False)
+            x, c = block_prefill(p, x, "global", cfg, positions=positions,
+                                 max_len=max_len, enc_kv=(xk, xv))
+            return x, {**c, "xk": xk, "xv": xv}
+
+        x, unit_caches = jax.lax.scan(body, x, params["dec_units"])
+        x = L.apply_norm(params["final_norm"], x[:, -1:, :], cfg)
+        logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+        return logits, {"units": unit_caches, "pos": jnp.asarray(s, jnp.int32)}
+
+    def decode_step(self, params: Params, cache: Params,
+                    token: jax.Array) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        x = params["embed"][token[:, None]].astype(cfg.dtype)
+        pos = cache["pos"]
+
+        def body(x, scanned):
+            p, c = scanned
+            enc_kv = (c["xk"], c["xv"])
+            x, cc = block_decode(p, x, "global", cfg, cache={"k": c["k"], "v": c["v"]},
+                                 pos=pos, enc_kv=enc_kv)
+            return x, {**cc, "xk": c["xk"], "xv": c["xv"]}
+
+        x, unit_caches = jax.lax.scan(body, x, (params["dec_units"], cache["units"]))
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+        return logits, {"units": unit_caches, "pos": pos + 1}

@@ -1,0 +1,24 @@
+"""Modality frontend STUBS (the one allowed carve-out).
+
+- audio (seamless): mel-spectrogram + conv feature extractor is NOT built;
+  ``audio_frame_specs`` provides precomputed frame embeddings.
+- vlm (chameleon): early fusion — the VQ-VAE tokenizer is NOT built; images
+  arrive as ordinary token ids inside the shared 65536 vocab, so the "stub"
+  is simply mixed token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def audio_frame_specs(cfg: ModelConfig, shape: InputShape) -> jax.ShapeDtypeStruct:
+    frames = max(1, shape.seq_len // cfg.encoder_frames_ratio)
+    return jax.ShapeDtypeStruct((shape.global_batch, frames, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+
+
+def synth_audio_frames(key, cfg: ModelConfig, batch: int, frames: int) -> jax.Array:
+    return jax.random.normal(key, (batch, frames, cfg.d_model)).astype(cfg.dtype)

@@ -1,0 +1,687 @@
+"""Model-layer primitives shared by every architecture family.
+
+Pure-jnp, batch-first, no explicit collectives: distribution comes from the
+shardings of params/inputs (GSPMD). Every function works under nested vmap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# initializers / norms
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def norm_init(d: int, cfg: ModelConfig) -> Params:
+    p = {"scale": jnp.ones((d,), dtype=cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=cfg.param_dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]                      # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, causal, optional sliding window)
+# --------------------------------------------------------------------------
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hq, hk = cfg.d_model, cfg.num_heads * cfg.d_head, cfg.num_kv_heads * cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, hk, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, hk, cfg.param_dtype),
+        "wo": dense_init(ks[3], hq, d, cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((hk,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((hk,), cfg.param_dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, n: int, dh: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _gqa_repeat(k: jax.Array, n_rep: int) -> jax.Array:
+    """(..., S, Hk, Dh) -> (..., S, Hk*n_rep, Dh) by repeat."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-2)
+
+
+_ATTN_CHUNK_Q = 512  # default q-block size for the memory-bounded jnp path
+
+
+def _attn_core(q, k, v, mask, softcap: Optional[float],
+               chunk_q: int = _ATTN_CHUNK_Q) -> jax.Array:
+    """q: (..., Sq, Hq, Dh); k,v: (..., Sk, Hq, Dh); mask: (..., Sq, Sk) bool.
+
+    Long sequences take a q-chunked path (scan over query blocks) so the
+    materialized logits stay O(chunk * Sk) instead of O(Sq * Sk) — the jnp
+    analogue of the Pallas flash kernel's VMEM blocking, and what keeps the
+    32k/500k dry-run memory analysis honest.
+    """
+    sq = q.shape[-3]
+    if (sq > chunk_q and sq % chunk_q == 0
+            and (mask is None or mask.ndim == 2)):
+        return _attn_core_chunked(q, k, v, mask, softcap, chunk_q)
+    return _attn_core_dense(q, k, v, mask, softcap)
+
+
+def _attn_core_dense(q, k, v, mask, softcap: Optional[float]) -> jax.Array:
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("...qhd,...khd->...hqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask is not None:
+        logits = jnp.where(mask[..., None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...hqk,...khd->...qhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _attn_core_chunked(q, k, v, mask, softcap, chunk: int) -> jax.Array:
+    b_dims = q.shape[:-3]
+    sq, h, d = q.shape[-3:]
+    nc = sq // chunk
+    qc = q.reshape(b_dims + (nc, chunk, h, d))
+    qc = jnp.moveaxis(qc, len(b_dims), 0)                  # (nc, ..., chunk, H, D)
+    mc = mask.reshape(nc, chunk, mask.shape[-1]) if mask is not None else None
+
+    @jax.checkpoint  # recompute chunk probs in backward: no O(Sq*Sk) residuals
+    def body(_, xs):
+        if mc is None:
+            qi = xs
+            mi = None
+        else:
+            qi, mi = xs
+        return None, _attn_core_dense(qi, k, v, mi, softcap)
+
+    _, outs = jax.lax.scan(body, None, qc if mc is None else (qc, mc))
+    return jnp.moveaxis(outs, 0, len(b_dims)).reshape(q.shape)
+
+
+def causal_mask(sq: int, sk: int, window: Optional[int] = None,
+                q_offset: int = 0) -> jax.Array:
+    """bool (sq, sk): True where attend. q position i attends k position j iff
+    j <= i+q_offset and (window is None or i+q_offset - j < window)."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array,
+                    window: Optional[int] = None,
+                    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    mask: Optional[jax.Array] = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    x: (B, S, D).  kv: optional precomputed (k, v) for cross-attention
+    (already head-split, rope-free).  mask overrides the causal default.
+    """
+    nh, nkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    explicit_mask = mask is not None
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = _split_heads(q, nh, dh)
+    if kv is None:
+        k = x @ p["wk"].astype(x.dtype)
+        v = x @ p["wv"].astype(x.dtype)
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+        k = _split_heads(k, nkv, dh)
+        v = _split_heads(v, nkv, dh)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if mask is None:
+            mask = causal_mask(x.shape[-2], x.shape[-2], window)
+    else:
+        k, v = kv
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+    if (cfg.use_pallas and kv is None and not explicit_mask
+            and cfg.attn_logit_softcap is None and x.ndim == 3):
+        from repro.kernels import flash_attention  # hot-spot kernel path
+        out = flash_attention(q, k, v, causal=True, window=window)
+    else:
+        k = _gqa_repeat(k, nh // nkv)
+        v = _gqa_repeat(v, nh // nkv)
+        out = _attn_core(q, k, v, mask, cfg.attn_logit_softcap,
+                         chunk_q=cfg.attn_chunk_q)
+    out = out.reshape(out.shape[:-2] + (nh * dh,))
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_kv(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 positions: Optional[jax.Array] = None,
+                 use_rope: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Project k,v (head-split, rope applied if requested) for cache fill."""
+    nkv, dh = cfg.num_kv_heads, cfg.d_head
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = _split_heads(k, nkv, dh)
+    v = _split_heads(v, nkv, dh)
+    if use_rope:
+        assert positions is not None
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_positions: jax.Array, position: jax.Array,
+                     use_rope: bool = True) -> jax.Array:
+    """One-token decode. x: (B, 1, D); caches: (B, Sc, Hk, Dh);
+    cache_positions: (B, Sc) int32 with -1 for empty slots (masked out);
+    position: (B,) current absolute position of the new token."""
+    nh, nkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = _split_heads(q, nh, dh)                          # (B,1,Hq,Dh)
+    if use_rope:
+        q = apply_rope(q, position[..., None], cfg.rope_theta)
+    k = _gqa_repeat(k_cache.astype(x.dtype), nh // nkv)
+    v = _gqa_repeat(v_cache.astype(x.dtype), nh // nkv)
+    mask = (cache_positions <= position[..., None]) & (cache_positions >= 0)
+    out = _attn_core(q, k, v, mask[..., None, :], cfg.attn_logit_softcap)
+    out = out.reshape(out.shape[:-2] + (nh * dh,))
+    return out @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs (swiglu / geglu / relu2 / gelu) and MoE
+# --------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], d, f, cfg.param_dtype),
+                "wg": dense_init(ks[1], d, f, cfg.param_dtype),
+                "wo": dense_init(ks[2], f, d, cfg.param_dtype)}
+    return {"wi": dense_init(ks[0], d, f, cfg.param_dtype),
+            "wo": dense_init(ks[2], f, d, cfg.param_dtype)}
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    elif cfg.mlp_variant == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    elif cfg.mlp_variant == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(x.dtype)))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    glu = cfg.mlp_variant in ("swiglu", "geglu")
+    p = {"router": dense_init(ks[0], d, e, jnp.float32),
+         "wi": (jax.random.normal(ks[1], (e, d, f)) / np.sqrt(d)).astype(cfg.param_dtype),
+         "wo": (jax.random.normal(ks[2], (e, f, d)) / np.sqrt(f)).astype(cfg.param_dtype)}
+    if glu:
+        p["wg"] = (jax.random.normal(ks[3], (e, d, f)) / np.sqrt(d)).astype(cfg.param_dtype)
+    return p
+
+
+_MOE_GROUP = 2048  # GShard-style token group: capacity & dispatch per group
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-factor top-k MoE (GShard-style einsum dispatch).
+
+    x: (B, S, D) -> (y, aux_loss).  FLOPs scale with top_k * capacity_factor,
+    not with num_experts (dispatch is one-hot).  Long sequences are processed
+    in token groups of _MOE_GROUP (capacity applies per group, exactly the
+    GShard 'group' semantics) so the (T, E, C) dispatch tensor stays bounded.
+    """
+    b, s, d = x.shape
+    t = b * s
+    group = cfg.moe_group
+    if t > group and t % group == 0:
+        xt = x.reshape(t // group, group, d)
+
+        def body(_, xg):
+            yg, auxg = _moe_group(p, xg, cfg)
+            return None, (yg, auxg)
+
+        _, (y, aux) = jax.lax.scan(body, None, xt)
+        return y.reshape(b, s, d), aux.mean()
+    y, aux = _moe_group(p, x.reshape(t, d), cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_group(p: Params, xt: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+
+    logits = (xt.astype(jnp.float32) @ p["router"])               # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)                                             # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_loss_coef
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)          # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)                         # (T, k)
+    in_cap = (pos < cap) & (onehot.sum(-1) > 0)
+
+    if cfg.moe_dispatch == "gather":
+        return _moe_gather_path(p, xt, cfg, cap, gate_idx, gate_vals, pos,
+                                in_cap), aux
+
+    # dispatch tensor (T, E, C) one-hot; combine weights folded in
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=xt.dtype)              # (T, k, C)
+    disp = jnp.einsum("tke,tkc->tec",
+                      (onehot * in_cap[..., None]).astype(xt.dtype), pos_oh)
+    expert_in = jnp.einsum("tec,td->ecd", disp, xt)                # (E, C, D)
+
+    if "wg" in p:
+        act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"].astype(xt.dtype))) * \
+            jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(xt.dtype))
+    else:
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(xt.dtype))))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xt.dtype))
+
+    combine = jnp.einsum("tec,tk,tke->tec", disp,
+                         gate_vals.astype(xt.dtype),
+                         onehot.astype(xt.dtype))
+    y = jnp.einsum("tec,ecd->td", combine, expert_out)
+    return y, aux
+
+
+def _moe_gather_path(p: Params, xt: jax.Array, cfg: ModelConfig, cap: int,
+                     gate_idx: jax.Array, gate_vals: jax.Array,
+                     pos: jax.Array, in_cap: jax.Array) -> jax.Array:
+    """Index-based dispatch/combine: replaces the two O(T*E*C*d) one-hot
+    einsums with an (E, C) token-id scatter + gathers.  Identical numerics
+    (tested against the einsum path)."""
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    tok_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    flat_e = gate_idx.reshape(-1)
+    flat_pos = jnp.where(in_cap.reshape(-1), pos.reshape(-1), cap)  # OOB slot
+    flat_tok = tok_ids.reshape(-1)
+    # slot -> token id (t == padding token). extra capacity column absorbs
+    # the dropped assignments; (e, pos) pairs are unique among in-capacity.
+    slot_tok = jnp.full((e, cap + 1), t, jnp.int32)
+    slot_tok = slot_tok.at[flat_e, flat_pos].set(flat_tok.astype(jnp.int32))
+    slot_tok = slot_tok[:, :cap]                                   # (E, C)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
+    expert_in = xt_pad[slot_tok]                                   # (E, C, D)
+
+    if "wg" in p:
+        act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"].astype(xt.dtype))) * \
+            jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(xt.dtype))
+    else:
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("ecd,edf->ecf", expert_in, p["wi"].astype(xt.dtype))))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xt.dtype))
+
+    # combine: y[t] = sum_k gate[t,k] * expert_out[e(t,k), pos(t,k)]
+    pos_c = jnp.minimum(pos, cap - 1)                              # (T, k)
+    picked = expert_out[gate_idx, pos_c]                           # (T, k, D)
+    w = (gate_vals * in_cap).astype(xt.dtype)                      # (T, k)
+    return jnp.einsum("tk,tkd->td", w, picked)
+
+
+def moe_apply_dense(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """All-expert weighted MoE for decode steps (tiny token counts, where
+    capacity dispatch would drop tokens).  FLOPs ~ E/k higher than dispatch,
+    acceptable because decode is bandwidth-bound; production serving would use
+    ragged dispatch (noted in DESIGN.md)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    full_gates = jnp.zeros((b * s, e), x.dtype).at[
+        jnp.arange(b * s)[:, None], gate_idx].set(gate_vals.astype(x.dtype))
+    if "wg" in p:
+        act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("td,edf->tef", xt, p["wg"].astype(x.dtype))) * \
+            jnp.einsum("td,edf->tef", xt, p["wi"].astype(x.dtype))
+    else:
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("td,edf->tef", xt, p["wi"].astype(x.dtype))))
+    yall = jnp.einsum("tef,efd->ted", h, p["wo"].astype(x.dtype))
+    y = jnp.einsum("te,ted->td", full_gates, yall)
+    return y.reshape(b, s, d)
+
+
+# --------------------------------------------------------------------------
+# depthwise causal conv1d (shared by ssd / rglru)
+# --------------------------------------------------------------------------
+def conv1d_init(key, channels: int, width: int, dtype) -> Params:
+    return {"w": (jax.random.normal(key, (width, channels)) / np.sqrt(width)).astype(dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def conv1d_apply(p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, C). Causal depthwise conv, width from params."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    xpad = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(width - 1, 0), (0, 0)])
+    out = sum(xpad[..., i:i + x.shape[-2], :] * w[i] for i in range(width))
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p: Params, buf: jax.Array, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode step. buf: (B, width-1, C) past inputs; x: (B, C)."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    window = jnp.concatenate([buf, x[..., None, :]], axis=-2)      # (B, width, C)
+    out = jnp.einsum("...wc,wc->...c", window, w) + p["b"].astype(x.dtype)
+    return window[..., -(width - 1):, :] if width > 1 else buf, out
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD block
+# --------------------------------------------------------------------------
+def ssd_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = di // cfg.ssm_head_dim
+    ns = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * ns
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ns + nh, cfg.param_dtype),
+        "conv": conv1d_init(ks[1], conv_dim, cfg.ssm_conv_width, cfg.param_dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((di,), cfg.param_dtype)},
+        "out_proj": dense_init(ks[2], di, d, cfg.param_dtype),
+    }
+
+
+def _ssd_split(p: Params, x: jax.Array, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ns = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ns], axis=-1)
+    return z, xbc, dt, di, ns, nh
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int):
+    """Chunked SSD (jnp oracle, also the model's default path).
+
+    x: (Bt, S, H, P); dt: (Bt, S, H) (already softplus'ed, >=0);
+    A: (H,) negative; B, C: (Bt, S, N).
+    Returns y: (Bt, S, H, P) and final state (Bt, H, P, N).
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xc = x.reshape(bt, nc, q, h, p)
+    dtc = dt.reshape(bt, nc, q, h)
+    Bc = B.reshape(bt, nc, q, n)
+    Cc = C.reshape(bt, nc, q, n)
+
+    dA = dtc * A  # (bt, nc, q, h) negative
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    # intra-chunk (dual quadratic form)
+    LT = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (bt,nc,q_i,q_j,h) = sum_{j<..<=i}
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], LT, -jnp.inf))
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (bt,nc,q,q)
+    M = G[..., None] * decay * dtc[:, :, None, :, :]    # (bt,nc,i,j,h)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # inter-chunk recurrence over states
+    chunk_decay = jnp.exp(cum[:, :, -1])                # (bt,nc,h)
+    # state contribution of each chunk: sum_j exp(sum_{k>j} dA) dt_j B_j x_j
+    rev = jnp.exp(cum[:, :, -1:, :] - cum)              # (bt,nc,q,h) decay j->end
+    state_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                             dtc * rev, Bc, xc)          # (bt,nc,h,p,n)
+
+    def step(carry, inp):
+        s_prev = carry
+        dec, sc = inp
+        s_new = s_prev * dec[..., None, None] + sc
+        return s_new, s_prev
+
+    init = jnp.zeros((bt, h, p, n), jnp.float32)
+    final, s_prevs = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(state_chunk, 1, 0).astype(jnp.float32)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)               # (bt,nc,h,p,n) state entering chunk
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cc.astype(jnp.float32), jnp.exp(cum), s_prevs)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(bt, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill forward. x: (B, S, D) -> (B, S, D)."""
+    z, xbc, dt, di, ns, nh = _ssd_split(p, x, cfg)
+    xbc = jax.nn.silu(conv1d_apply(p["conv"], xbc))
+    xs, B, C = jnp.split(xbc, [di, di + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ph = cfg.ssm_head_dim
+    xh = xs.reshape(xs.shape[:-1] + (nh, ph))
+    s = xh.shape[1]
+    if cfg.use_pallas and xh.ndim == 4:
+        from repro.kernels import ssd_scan  # hot-spot kernel path
+        y = ssd_scan(xh, dt, A, B, C, chunk=cfg.ssm_chunk)
+        pad = 0
+    elif (pad := (-s) % cfg.ssm_chunk):
+        y, _ = ssd_scan_ref(
+            jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(B, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(C, ((0, 0), (0, pad), (0, 0))), cfg.ssm_chunk)
+        y = y[:, :s]
+    else:
+        y, _ = ssd_scan_ref(xh, dt, A, B, C, cfg.ssm_chunk)
+    y = y + xh * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(xs.shape)
+    # gated rmsnorm
+    y = y * jax.nn.silu(z)
+    ms = (y.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype) \
+        * p["out_norm"]["scale"].astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def ssd_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+               state: Params) -> Tuple[jax.Array, Params]:
+    """One-step decode. x: (B, 1, D); state: {'ssm': (B,H,P,N), 'conv': (B,w-1,C)}."""
+    z, xbc, dt, di, ns, nh = _ssd_split(p, x, cfg)
+    conv_buf, xbc1 = conv1d_step(p["conv"], state["conv"], xbc[:, 0])
+    xbc1 = jax.nn.silu(xbc1)
+    xs, B, C = jnp.split(xbc1, [di, di + ns], axis=-1)     # (B, di/ns)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    ph = cfg.ssm_head_dim
+    xh = xs.reshape(xs.shape[:-1] + (nh, ph))              # (B,H,P)
+    dA = jnp.exp(dt1 * A)                                  # (B,H)
+    s = state["ssm"] * dA[..., None, None] + \
+        jnp.einsum("bh,bn,bhp->bhpn", dt1.astype(x.dtype), B, xh)
+    y = jnp.einsum("bn,bhpn->bhp", C, s) + xh * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(x.shape[0], di)
+    y = y * jax.nn.silu(z[:, 0])
+    ms = (y.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)).astype(x.dtype) \
+        * p["out_norm"]["scale"].astype(x.dtype)
+    y = (y @ p["out_proj"].astype(x.dtype))[:, None, :]
+    return y, {"ssm": s, "conv": conv_buf}
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * cfg.ssm_state
+    return {"ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+            "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype)}
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma / Griffin)
+# --------------------------------------------------------------------------
+_RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(L)^c is in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log((u ** (1.0 / _RGLRU_C)) / (1 - u ** (1.0 / _RGLRU_C)))
+    return {
+        "in_x": dense_init(ks[1], d, w, cfg.param_dtype),
+        "in_gate": dense_init(ks[2], d, w, cfg.param_dtype),
+        "conv": conv1d_init(ks[3], w, cfg.conv1d_width, cfg.param_dtype),
+        "w_a": dense_init(ks[4], w, w, cfg.param_dtype),
+        "w_i": dense_init(ks[5], w, w, cfg.param_dtype),
+        "Lambda": lam.astype(jnp.float32),
+        "out": dense_init(jax.random.fold_in(key, 7), w, d, cfg.param_dtype),
+    }
+
+
+def rglru_gates(p: Params, xs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """RG-LRU gate computation -> (a, b) of h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(xs @ p["w_a"].astype(xs.dtype))     # recurrence gate
+    i = jax.nn.sigmoid(xs @ p["w_i"].astype(xs.dtype))     # input gate
+    # a_t = sigmoid(Lambda)^(c * r_t)  computed in log space for stability
+    log_a = _RGLRU_C * r.astype(jnp.float32) * jax.nn.log_sigmoid(p["Lambda"])
+    a = jnp.exp(log_a)                                     # (B,S,W) in (0,1)
+    gated = (i * xs).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    return a, b
+
+
+def rglru_core(p: Params, xs: jax.Array,
+               h0: Optional[jax.Array] = None,
+               use_pallas: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """The RG-LRU recurrence. xs: (B, S, W) -> (ys, h_final)."""
+    a, b = rglru_gates(p, xs)
+
+    if use_pallas and h0 is None and xs.ndim == 3:
+        from repro.kernels import rglru_scan  # hot-spot kernel path
+        bb = rglru_scan(a, b)
+        return bb.astype(xs.dtype), bb[..., -1, :]
+
+    # linear recurrence h_t = a_t h_{t-1} + b_t  via associative scan over S
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(comb, (a, b), axis=-2)
+    if h0 is not None:
+        bb = bb + aa * h0[..., None, :].astype(jnp.float32)
+    h_final = bb[..., -1, :]
+    return bb.astype(xs.dtype), h_final
+
+
+def rglru_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill. x: (B, S, D)."""
+    xs = x @ p["in_x"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    xs = conv1d_apply(p["conv"], xs)
+    ys, _ = rglru_core(p, xs, use_pallas=cfg.use_pallas)
+    return (ys * gate) @ p["out"].astype(x.dtype)
+
+
+def rglru_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: Params) -> Tuple[jax.Array, Params]:
+    """x: (B, 1, D); state: {'h': (B, W), 'conv': (B, w-1, W)}."""
+    xs = (x[:, 0] @ p["in_x"].astype(x.dtype))
+    gate = jax.nn.gelu(x[:, 0] @ p["in_gate"].astype(x.dtype))
+    conv_buf, xs = conv1d_step(p["conv"], state["conv"], xs)
+    r = jax.nn.sigmoid(xs @ p["w_a"].astype(xs.dtype))
+    i = jax.nn.sigmoid(xs @ p["w_i"].astype(xs.dtype))
+    a = jnp.exp(_RGLRU_C * r.astype(jnp.float32) * jax.nn.log_sigmoid(p["Lambda"]))
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xs).astype(jnp.float32)
+    h = a * state["h"].astype(jnp.float32) + b
+    y = (h.astype(x.dtype) * gate) @ p["out"].astype(x.dtype)
+    return y[:, None, :], {"h": h, "conv": conv_buf}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    w = cfg.rglru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}

@@ -1,0 +1,60 @@
+"""Unified model API: ``build_model(cfg)`` and ``input_specs(cfg, shape)``.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+given (arch, input-shape) pair — weak-type-correct, shardable, no device
+allocation — which is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.frontends import audio_frame_specs
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["enc_inputs"] = audio_frame_specs(cfg, shape)
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Specs for (cache, token) of a one-token serve step with a seq_len cache."""
+    model = build_model(cfg)
+    b = shape.global_batch
+    if cfg.family == "encdec":
+        enc_len = max(1, shape.seq_len // cfg.encoder_frames_ratio)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len, enc_len=enc_len))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {"cache": cache, "token": token}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        if cfg.family == "encdec":
+            specs["enc_inputs"] = audio_frame_specs(cfg, shape)
+        return specs
+    return decode_state_specs(cfg, shape)

@@ -1,0 +1,82 @@
+"""The paper's own experiment models, at CPU scale.
+
+The paper trains VGG-11 (CIFAR-10 / CelebA) and a 9-layer CNN (FEMNIST).
+Offline we reproduce the *claims* (sandwich behaviour, grouping effects,
+multi-level) with the same loss geometry: softmax CE classifiers on non-IID
+data — an MLP (VGG stand-in) and a small CNN (FEMNIST stand-in).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SimpleConfig:
+    kind: str = "mlp"          # 'mlp' | 'cnn' | 'linear'
+    input_dim: int = 32        # mlp/linear: features; cnn: image side
+    channels: int = 1
+    hidden: int = 64
+    num_classes: int = 10
+
+
+def _dense(key, din, dout):
+    return {"w": jax.random.normal(key, (din, dout)) / np.sqrt(din),
+            "b": jnp.zeros((dout,))}
+
+
+class SimpleModel:
+    def __init__(self, cfg: SimpleConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        if cfg.kind == "linear":
+            return {"out": _dense(ks[0], cfg.input_dim, cfg.num_classes)}
+        if cfg.kind == "mlp":
+            return {"h1": _dense(ks[0], cfg.input_dim, cfg.hidden),
+                    "h2": _dense(ks[1], cfg.hidden, cfg.hidden),
+                    "out": _dense(ks[2], cfg.hidden, cfg.num_classes)}
+        # cnn: two 3x3 convs + pool + dense (the paper's FEMNIST CNN, shrunk)
+        c = cfg.channels
+        return {
+            "c1": {"w": jax.random.normal(ks[0], (3, 3, c, 8)) / 3.0,
+                   "b": jnp.zeros((8,))},
+            "c2": {"w": jax.random.normal(ks[1], (3, 3, 8, 16)) / np.sqrt(72),
+                   "b": jnp.zeros((16,))},
+            "out": _dense(ks[2], (cfg.input_dim // 4) ** 2 * 16, cfg.num_classes),
+        }
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        if cfg.kind == "linear":
+            return x @ params["out"]["w"] + params["out"]["b"]
+        if cfg.kind == "mlp":
+            h = jax.nn.relu(x @ params["h1"]["w"] + params["h1"]["b"])
+            h = jax.nn.relu(h @ params["h2"]["w"] + params["h2"]["b"])
+            return h @ params["out"]["w"] + params["out"]["b"]
+        h = x.reshape(x.shape[0], cfg.input_dim, cfg.input_dim, cfg.channels)
+        for name in ("c1", "c2"):
+            h = jax.lax.conv_general_dilated(
+                h, params[name]["w"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + params[name]["b"]
+            h = jax.nn.relu(h)
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        h = h.reshape(h.shape[0], -1)
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        lg = self.logits(params, batch["x"])
+        logp = jax.nn.log_softmax(lg)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1).mean()
+        return nll, {"ce": nll}
+
+    def accuracy(self, params, batch) -> jax.Array:
+        lg = self.logits(params, batch["x"])
+        return (jnp.argmax(lg, -1) == batch["y"]).mean()

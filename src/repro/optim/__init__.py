@@ -1,0 +1,5 @@
+from repro.optim.optimizers import Optimizer, adam, momentum, sgd
+from repro.optim.schedule import constant, cosine, linear_warmup
+
+__all__ = ["Optimizer", "adam", "momentum", "sgd",
+           "constant", "cosine", "linear_warmup"]

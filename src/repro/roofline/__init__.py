@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW, RooflineReport, analyze_compiled,
+                                     collective_bytes, combine_train_steps)
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes",
+           "combine_train_steps"]

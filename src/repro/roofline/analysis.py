@@ -1,0 +1,203 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / link_bw
+                    (cross-pod collectives priced at DCI bandwidth)
+
+The SPMD-partitioned module is per-device, so cost_analysis() and the HLO
+shapes are already per-chip.  collective_bytes is NOT in cost_analysis —
+we parse the compiled HLO text and sum result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# "f32[2,16,128]{2,1,0}" or bare "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result = <shape-or-tuple> <op>( ... which op names start the rhs
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+# iota format: replica_groups=[16,4]<=[2,4,8]T(0,2,1)
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _iota_groups_cross_pod(m, pod_size: int) -> bool:
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    perm = ([int(x) for x in m.group(4).split(",")]
+            if m.group(4) else list(range(len(dims))))
+    ids = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm).reshape(g, s)
+    pods = ids // pod_size
+    return bool((pods != pods[:, :1]).any())
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-like chip (task-provided constants)."""
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link (intra-pod)
+    dci_bw: float = 25e9            # B/s (cross-pod)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, pod_size: int = 256) -> Dict[str, float]:
+    """Per-chip bytes by collective kind, split intra/cross-pod via
+    replica_groups span ( -start ops counted once; -done skipped)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["cross_pod"] = 0.0
+    out["intra_pod"] = 0.0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_txt)
+        out[kind] += nbytes
+        cross = False
+        im = _IOTA_RE.search(line)
+        if im:
+            cross = _iota_groups_cross_pod(im, pod_size)
+        else:
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                first = gm.group(1)
+                ids = [int(x) for x in re.findall(r"\d+", first.split("}")[0])]
+                if ids and (max(ids) // pod_size) != (min(ids) // pod_size):
+                    cross = True
+        out["cross_pod" if cross else "intra_pod"] += nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_intra: float
+    coll_cross: float
+    coll_by_kind: Dict[str, float]
+    peak_memory_bytes: Optional[float]
+    hw: HW = dataclasses.field(default_factory=HW)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / self.hw.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_intra / self.hw.ici_bw + self.coll_cross / self.hw.dci_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap estimate of a step (sum is pessimistic; max is the
+        perfectly-overlapped bound — we report both)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def asdict(self) -> Dict:
+        return {
+            "name": self.name,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_intra_bytes": self.coll_intra,
+            "coll_cross_bytes": self.coll_cross,
+            "coll_by_kind": self.coll_by_kind,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s_overlapped": self.step_s,
+        }
+
+
+def analyze_compiled(name: str, compiled, pod_size: int = 256,
+                     hw: HW = HW()) -> RooflineReport:
+    """Uses the trip-count-aware HLO cost model (repro.roofline.hlo_cost):
+    XLA's cost_analysis() counts while bodies once, undercounting scanned-
+    layer models by the layer count."""
+    from repro.roofline.hlo_cost import analyze_hlo
+    hlo = compiled.as_text()
+    c = analyze_hlo(hlo, pod_size=pod_size)
+    flops = c.flops
+    byts = c.bytes
+    coll = {"intra_pod": c.coll_intra, "cross_pod": c.coll_cross,
+            **c.coll_by_kind}
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak = float(getattr(ma, "temp_size_in_bytes", 0) +
+                         getattr(ma, "argument_size_in_bytes", 0) +
+                         getattr(ma, "output_size_in_bytes", 0) -
+                         getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        name=name, flops_per_chip=flops, bytes_per_chip=byts,
+        coll_intra=coll["intra_pod"], coll_cross=coll["cross_pod"],
+        coll_by_kind={k: coll[k] for k in _COLLECTIVES}, peak_memory_bytes=peak,
+        hw=hw)
+
+
+def combine_train_steps(reports: Dict[str, RooflineReport], G: int,
+                        I: int) -> Dict[str, float]:
+    """Amortized H-SGD step over one global period:
+    (G - G/I) pure-local + (G/I - 1) local-sync + 1 global-sync steps.
+    M=1 hierarchies (fsdp mapping) have no local sync: local stands in."""
+    lsync = reports.get("local_sync", reports["local"])
+    n_local = G - G // I
+    n_lsync = G // I - 1
+    out = {}
+    for term in ("compute_s", "memory_s", "collective_s"):
+        tot = (n_local * getattr(reports["local"], term)
+               + n_lsync * getattr(lsync, term)
+               + getattr(reports["global_sync"], term))
+        out[term] = tot / G
+    out["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda t: out[t])
+    return out

@@ -1,0 +1,362 @@
+"""Recursive HLO cost model with while-loop trip-count awareness.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE, which
+undercounts scanned-layer models by the layer count (verified in tests).
+This module parses the compiled HLO text and recursively analyses the entry
+computation:
+
+  * dot            — 2 * result_elems * contraction_size
+  * convolution    — 2 * result_elems * prod(kernel dims) / out_features
+  * elementwise    — result_elems (minor; dots dominate)
+  * fusion/call    — cost of the called computation
+  * while          — trip_count * (body + condition)   <- the fix
+  * collectives    — result bytes, split intra/cross-pod, trip-scaled
+
+Bytes follow XLA's "bytes accessed" convention on the optimized module:
+per top-level instruction, operands read + result written (fusion internals
+excluded).  Validated against cost_analysis() on loop-free modules in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "tanh", "exponential",
+    "log", "rsqrt", "sqrt", "maximum", "minimum", "negate", "abs", "floor",
+    "ceil", "sign", "cosine", "sine", "logistic", "atan2", "remainder",
+    "and", "or", "xor", "not", "select", "clamp", "compare",
+    "exponential-minus-one", "log-plus-one", "cbrt", "erf",
+}
+_REDUCE_LIKE = {"reduce", "reduce-window"}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*)$")
+_IOTA_RG = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                      r"(?:T\(([\d,]+)\))?")
+_BRACE_RG = re.compile(r"replica_groups=\{(\{[\d,]*\})")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]  # result shapes (tuple-flattened)
+    op: str
+    operands: List[str]
+    attrs: str
+    raw: str = ""
+
+    def result_elems(self) -> int:
+        return sum(int(np.prod(s)) if s else 1 for _, s in self.shapes)
+
+    def result_bytes(self) -> int:
+        return sum((int(np.prod(s)) if s else 1) * _DTYPE_BYTES.get(dt, 0)
+                   for dt, s in self.shapes)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_intra: float = 0.0
+    coll_cross: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_intra += o.coll_intra
+        self.coll_cross += o.coll_cross
+        for k in _COLLECTIVES:
+            self.coll_by_kind[k] += o.coll_by_kind[k]
+        return self
+
+    def scaled(self, t: float) -> "Cost":
+        return Cost(self.flops * t, self.bytes * t, self.coll_intra * t,
+                    self.coll_cross * t,
+                    {k: v * t for k, v in self.coll_by_kind.items()})
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_ATOM.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+_OPNAME = re.compile(r"^([a-z][\w\-]*)\(")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        m = _COMP_START.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        # split rhs into "<shape> op(...)..." — find the op token
+        # shape part ends at the first " <opname>(" occurrence
+        om = re.search(r"\s([a-z][a-z0-9\-]*)\(", rhs)
+        if not om:
+            continue
+        op = om.group(1)
+        shape_txt = rhs[:om.start()]
+        rest = rhs[om.end():]
+        # operand names: inside the first balanced (...) after op
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_txt = rest[:i - 1] if i else ""
+        attrs = rest[i:]
+        operands = re.findall(r"%([\w\.\-]+)", operand_txt)
+        comps[cur].append(Instr(name, _parse_shapes(shape_txt), op,
+                                operands, attrs, raw=rhs))
+    return comps, entry
+
+
+class ModuleCost:
+    def __init__(self, text: str, pod_size: int = 256):
+        self.comps, self.entry = parse_module(text)
+        self.pod_size = pod_size
+        self._memo: Dict[str, Cost] = {}
+        # scalar integer constants per computation (for while trip counts)
+        self._const: Dict[str, Dict[str, int]] = {}
+        for cname, instrs in self.comps.items():
+            d = {}
+            for ins in instrs:
+                if ins.op == "constant":
+                    m = re.search(r"constant\((\d+)\)", ins.raw)
+                    if m:
+                        d[ins.name] = int(m.group(1))
+            self._const[cname] = d
+
+    # -- helpers -----------------------------------------------------------
+    def _defs(self, cname: str) -> Dict[str, Instr]:
+        return {i.name: i for i in self.comps[cname]}
+
+    def _operand_bytes(self, cname: str, ins: Instr) -> int:
+        defs = self._defs(cname)
+        total = 0
+        for op in ins.operands:
+            d = defs.get(op)
+            if d is not None:
+                total += d.result_bytes()
+        return total
+
+    def _access_bytes(self, cname: str, ins: Instr) -> float:
+        """XLA-convention bytes accessed for one top-level instruction.
+        Slicing ops read only what they produce; dynamic-update-slice writes
+        only the update (the big buffer is aliased)."""
+        defs = self._defs(cname)
+        op = ins.op
+        if op in ("slice", "dynamic-slice", "gather"):
+            return 2.0 * ins.result_bytes()
+        if op == "dynamic-update-slice":
+            upd = defs.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            ub = upd.result_bytes() if upd else ins.result_bytes()
+            return 2.0 * ub
+        if op == "fusion":
+            m = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+            inner_name = m.group(1) if m else None
+            total = float(ins.result_bytes())
+            inner = self.comps.get(inner_name, []) if inner_name else []
+            # map fusion operand i -> inner parameter(i); if every inner use
+            # of that parameter is a slicing op, charge the sliced bytes only
+            params: Dict[int, str] = {}
+            for iins in inner:
+                if iins.op == "parameter":
+                    pm = re.match(r"^\s*(\d+)\s*\)", iins.attrs) or \
+                        re.search(r"parameter\((\d+)\)", iins.raw)
+                    if pm:
+                        params[int(pm.group(1))] = iins.name
+            for idx, opnd in enumerate(ins.operands):
+                d = defs.get(opnd)
+                if d is None:
+                    continue
+                pname = params.get(idx)
+                charged = d.result_bytes()
+                if pname is not None:
+                    users = [u for u in inner if pname in u.operands]
+                    if users and all(u.op in ("slice", "dynamic-slice",
+                                              "gather", "dynamic-update-slice")
+                                     for u in users):
+                        charged = sum(
+                            (self._defs(inner_name)[u.operands[1]].result_bytes()
+                             if u.op == "dynamic-update-slice"
+                             and len(u.operands) > 1
+                             and u.operands[1] in self._defs(inner_name)
+                             else u.result_bytes())
+                            for u in users)
+                total += charged
+            return total
+        return float(self._operand_bytes(cname, ins) + ins.result_bytes())
+
+    def _dot_flops(self, cname: str, ins: Instr) -> float:
+        defs = self._defs(cname)
+        lhs = defs.get(ins.operands[0]) if ins.operands else None
+        if lhs is None or not lhs.shapes:
+            return 2.0 * ins.result_elems()
+        lhs_shape = lhs.shapes[0][1]
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        contract = 1
+        if m and m.group(1):
+            for di in m.group(1).split(","):
+                di = int(di)
+                if di < len(lhs_shape):
+                    contract *= lhs_shape[di]
+        return 2.0 * ins.result_elems() * contract
+
+    def _conv_flops(self, cname: str, ins: Instr) -> float:
+        defs = self._defs(cname)
+        rhs = defs.get(ins.operands[1]) if len(ins.operands) > 1 else None
+        if rhs is None or not rhs.shapes:
+            return 2.0 * ins.result_elems()
+        rhs_shape = rhs.shapes[0][1]
+        # out-features: the 'o' dim of dim_labels rhs part (e.g. b0f_0io->b0f)
+        m = re.search(r"dim_labels=\w+_(\w+)->", ins.attrs)
+        o_size = 1
+        if m:
+            labels = m.group(1)
+            oi = labels.index("o") if "o" in labels else None
+            if oi is not None and oi < len(rhs_shape):
+                o_size = rhs_shape[oi]
+        kernel = int(np.prod(rhs_shape)) // max(o_size, 1)
+        return 2.0 * ins.result_elems() * kernel
+
+    def _trip(self, cond_name: str) -> int:
+        return max([1] + list(self._const.get(cond_name, {}).values()))
+
+    def _collective(self, ins: Instr) -> Tuple[float, bool]:
+        nbytes = ins.result_bytes()
+        cross = False
+        m = _IOTA_RG.search(ins.attrs)
+        if m:
+            g, s = int(m.group(1)), int(m.group(2))
+            dims = [int(x) for x in m.group(3).split(",")]
+            perm = ([int(x) for x in m.group(4).split(",")]
+                    if m.group(4) else list(range(len(dims))))
+            ids = np.arange(int(np.prod(dims))).reshape(dims)
+            ids = ids.transpose(perm).reshape(g, s)
+            pods = ids // self.pod_size
+            cross = bool((pods != pods[:, :1]).any())
+        else:
+            mb = _BRACE_RG.search(ins.attrs)
+            if mb:
+                ids = [int(x) for x in re.findall(r"\d+", mb.group(1))]
+                if ids and max(ids) // self.pod_size != min(ids) // self.pod_size:
+                    cross = True
+        return nbytes, cross
+
+    # -- main recursion ------------------------------------------------------
+    def cost_of(self, cname: str) -> Cost:
+        if cname in self._memo:
+            return self._memo[cname]
+        self._memo[cname] = Cost()  # cycle guard
+        total = Cost()
+        for ins in self.comps.get(cname, []):
+            op = ins.op
+            if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "copy", "after-all", "iota"):
+                # zero-flop; copies do move bytes
+                if op == "copy":
+                    total += Cost(bytes=2.0 * ins.result_bytes())
+                continue
+            if op in ("while", "call", "conditional"):
+                # control flow: charge only the inner computations (the
+                # carried tuple is aliased, not re-materialized per step)
+                base = Cost()
+            else:
+                base = Cost(bytes=self._access_bytes(cname, ins))
+            if op == "dot":
+                base.flops = self._dot_flops(cname, ins)
+            elif op == "convolution":
+                base.flops = self._conv_flops(cname, ins)
+            elif op == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", ins.attrs)
+                if m:
+                    inner = self.cost_of(m.group(1))
+                    base.flops = inner.flops
+                    base.coll_intra = inner.coll_intra
+                    base.coll_cross = inner.coll_cross
+                    base.coll_by_kind = dict(inner.coll_by_kind)
+            elif op == "call":
+                m = re.search(r"to_apply=%([\w\.\-]+)", ins.attrs)
+                if m:
+                    base += self.cost_of(m.group(1))
+            elif op == "conditional":
+                mb = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                if mb:
+                    branches = re.findall(r"%([\w\.\-]+)", mb.group(1))
+                    if branches:  # charge the most expensive branch
+                        costs = [self.cost_of(b) for b in branches]
+                        base += max(costs, key=lambda c: c.flops + c.bytes)
+            elif op == "while":
+                mb = re.search(r"body=%([\w\.\-]+)", ins.attrs)
+                mc = re.search(r"condition=%([\w\.\-]+)", ins.attrs)
+                if mb and mc:
+                    trip = self._trip(mc.group(1))
+                    inner = self.cost_of(mb.group(1)) \
+                        .scaled(trip)
+                    inner += self.cost_of(mc.group(1)).scaled(trip)
+                    base += inner
+            elif any(op.startswith(c) for c in _COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                kind = next(c for c in _COLLECTIVES if op.startswith(c))
+                nbytes, cross = self._collective(ins)
+                base.coll_by_kind[kind] += nbytes
+                if cross:
+                    base.coll_cross += nbytes
+                else:
+                    base.coll_intra += nbytes
+            elif op in _ELEMENTWISE:
+                base.flops = float(ins.result_elems())
+            elif op in _REDUCE_LIKE:
+                base.flops = float(self._operand_bytes(cname, ins)) / 4.0
+            total += base
+        self._memo[cname] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(text: str, pod_size: int = 256) -> Cost:
+    return ModuleCost(text, pod_size=pod_size).entry_cost()

@@ -1,0 +1,80 @@
+"""Batched serving engine: prefill once, decode step-by-step.
+
+Caches come from the model (full KV, sliding-window ring, SSM state, RG-LRU
+state — see repro.models.transformer.block_cache_init).  All requests in a
+batch decode in lockstep (static shapes; production would add continuous
+batching on top — out of scope for a training-technique paper, noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, gen_len)
+    logprobs: np.ndarray        # (B, gen_len)
+    steps: int
+
+
+class DecodeEngine:
+    def __init__(self, model, params, *, temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.temperature = temperature
+        self._prefill = jax.jit(model.prefill, static_argnames=("max_len",))
+        self._step = jax.jit(model.decode_step)
+
+    def _sample(self, key, logits):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.temperature, axis=-1
+                                      ).astype(jnp.int32)
+
+    def generate(self, prompt: jax.Array, gen_len: int, *,
+                 key: Optional[jax.Array] = None,
+                 enc_inputs: Optional[jax.Array] = None) -> GenerationResult:
+        """prompt: (B, S) int32. Greedy (or temperature) continuation."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b, s = prompt.shape
+        max_len = s + gen_len
+        kw = {"enc_inputs": enc_inputs} if enc_inputs is not None else {}
+        logits, cache = self._prefill(self.params, prompt, max_len=max_len, **kw)
+        toks, lps = [], []
+        tok = self._sample(key, logits)
+        for t in range(gen_len):
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            lps.append(np.asarray(jnp.take_along_axis(
+                logp, tok[:, None], axis=-1))[:, 0])
+            toks.append(np.asarray(tok))
+            if t + 1 < gen_len:
+                key, sub = jax.random.split(key)
+                logits, cache = self._step(self.params, cache, tok)
+                tok = self._sample(sub, logits)
+        return GenerationResult(np.stack(toks, 1), np.stack(lps, 1), gen_len)
+
+    def score_continuation(self, prompt: jax.Array,
+                           continuation: jax.Array,
+                           enc_inputs: Optional[jax.Array] = None) -> np.ndarray:
+        """Sum logprob of a given continuation (evaluation utility)."""
+        b, s = prompt.shape
+        g = continuation.shape[1]
+        kw = {"enc_inputs": enc_inputs} if enc_inputs is not None else {}
+        logits, cache = self._prefill(self.params, prompt,
+                                      max_len=s + g, **kw)
+        total = np.zeros(b, np.float64)
+        tok = continuation[:, 0]
+        for t in range(g):
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            total += np.asarray(jnp.take_along_axis(
+                logp, tok[:, None], axis=-1))[:, 0]
+            if t + 1 < g:
+                logits, cache = self._step(self.params, cache, tok)
+                tok = continuation[:, t + 1]
+        return total

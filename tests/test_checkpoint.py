@@ -1,0 +1,55 @@
+"""Checkpoint roundtrip tests (incl. bfloat16 wire format, latest-step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+
+
+def test_roundtrip_mixed_dtypes(tmp_path, rng):
+    tree = {
+        "a": jax.random.normal(rng, (4, 5)),
+        "b": {"c": jnp.arange(7, dtype=jnp.int32),
+              "d": jax.random.normal(rng, (3,)).astype(jnp.bfloat16)},
+        "scalar": jnp.asarray(2, jnp.int32),
+    }
+    save(str(tmp_path), 12, tree)
+    step, back = restore(str(tmp_path), tree)
+    assert step == 12
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    assert latest_step(str(tmp_path)) is None
+    save(str(tmp_path), 3, tree)
+    save(str(tmp_path), 10, tree)
+    assert latest_step(str(tmp_path)) == 10
+    step, _ = restore(str(tmp_path), tree)
+    assert step == 10
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {"x": jnp.zeros(2)})
+    with pytest.raises(AssertionError):
+        restore(str(tmp_path), {"x": jnp.zeros(2), "y": jnp.zeros(1)})
+
+
+def test_train_state_roundtrip(tmp_path, rng):
+    """Full HSGD state roundtrips (resume support)."""
+    from repro.core import HSGD, UniformTopology, two_level
+    from repro.models import SimpleConfig, SimpleModel
+    from repro.optim import momentum
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=8, hidden=8,
+                                     num_classes=4))
+    eng = HSGD(model.loss, momentum(0.1), UniformTopology(two_level(4, 2, 4, 2)))
+    st = eng.init(rng, model.init)
+    tree = {"params": st.params, "opt": st.opt_state, "step": st.step}
+    save(str(tmp_path), 0, tree)
+    _, back = restore(str(tmp_path), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

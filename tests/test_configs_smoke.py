@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests: a REDUCED same-family variant runs one
+forward/train step on CPU; output shapes + finiteness asserted.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, reduced
+from repro.models import build_model
+from repro.optim import sgd
+
+CONFIGS = all_configs()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_constraints(arch):
+    cfg = reduced(CONFIGS[arch])
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.num_layers <= max(3, len(cfg.block_pattern))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = reduced(CONFIGS[arch])
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 16
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "encdec":
+        enc = jax.random.normal(rng, (B, 4, cfg.d_model), dtype=jnp.float32)
+        logits, aux = model.forward(params, toks, enc)
+    else:
+        logits, aux = model.forward(params, toks)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_reduces_loss_direction(arch, rng):
+    """One SGD step on a fixed batch must not produce NaNs and must change
+    params; loss on the same batch should not increase (small lr)."""
+    cfg = reduced(CONFIGS[arch])
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["enc_inputs"] = jax.random.normal(
+            rng, (B, 4, cfg.d_model), dtype=jnp.float32)
+    opt = sgd(1e-2)
+    ostate = opt.init(params)
+    loss0, _ = model.loss(params, batch)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    upd, ostate = opt.update(grads, ostate, params)
+    params2 = jax.tree.map(jnp.add, params, upd)
+    loss1, _ = model.loss(params2, batch)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss1))
+    assert float(loss1) <= float(loss0) + 1e-3, (float(loss0), float(loss1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_smoke(arch, rng):
+    cfg = reduced(CONFIGS[arch])
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 8
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_inputs"] = jax.random.normal(rng, (B, 4, cfg.d_model),
+                                             dtype=jnp.float32)
+    lg, cache = model.prefill(params, toks, max_len=S + 2, **kw)
+    assert lg.shape == (B, cfg.vocab_size)
+    lg2, cache = model.decode_step(params, cache, jnp.argmax(lg, -1).astype(jnp.int32))
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+
+def test_exact_assigned_numbers():
+    """The full configs carry the exact assigned architecture numbers."""
+    c = get_config("nemotron-4-340b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (96, 18432, 96, 8, 73728, 256000)
+    assert c.mlp_variant == "relu2"
+    c = get_config("qwen2-0.5b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (24, 896, 14, 2, 4864, 151936)
+    assert c.qkv_bias
+    c = get_config("gemma3-12b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (48, 3840, 16, 8, 15360, 262144)
+    assert c.block_pattern.count("local") == 5 and \
+        c.block_pattern.count("global") == 1
+    c = get_config("recurrentgemma-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (26, 2560, 10, 1, 7680, 256000)
+    c = get_config("seamless-m4t-large-v2")
+    assert (c.num_layers, c.num_encoder_layers, c.d_model, c.num_heads,
+            c.d_ff, c.vocab_size) == (24, 24, 1024, 16, 8192, 256206)
+    c = get_config("phi3-mini-3.8b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (32, 3072, 32, 32, 8192, 32064)
+    c = get_config("mamba2-130m")
+    assert (c.num_layers, c.d_model, c.vocab_size, c.ssm_state) == \
+        (24, 768, 50280, 128)
+    assert c.d_ff == 0 and c.block_pattern == ("ssd",)
+    c = get_config("chameleon-34b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (48, 8192, 64, 8, 22016, 65536)
+    c = get_config("mixtral-8x22b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (56, 6144, 48, 8, 16384, 32768)
+    assert (c.num_experts, c.num_experts_per_tok) == (8, 2)
+    assert c.sliding_window == 4096
+    c = get_config("olmoe-1b-7b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.moe_d_ff,
+            c.vocab_size) == (16, 2048, 16, 1024, 50304)
+    assert (c.num_experts, c.num_experts_per_tok) == (64, 8)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_analytic_close(arch, rng):
+    """Analytic param_count (used for roofline MODEL_FLOPS) matches the real
+    reduced pytree within 1.5%."""
+    cfg = reduced(CONFIGS[arch])
+    model = build_model(cfg)
+    params = model.init(rng)
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    assert abs(actual - cfg.param_count()) / actual < 0.015

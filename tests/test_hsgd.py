@@ -1,0 +1,216 @@
+"""H-SGD engine semantics (Algorithm 1 / D.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HSGD, GroupedTopology, HierarchySpec, UniformTopology,
+                        contiguous, local_sgd, two_level)
+from repro.data import FederatedDataset, label_shard_partition, make_classification
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import adam, momentum, sgd
+
+N_WORKERS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_classification(0, num_classes=8, dim=16, per_class=40)
+    parts = label_shard_partition(y, [[j] for j in range(8)])
+    ds = FederatedDataset(x, y, parts)
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=24,
+                                     num_classes=8))
+    return ds, model
+
+
+def run_T(model, ds, topology, T=16, lr=0.05, opt=None):
+    eng = HSGD(model.loss, opt or sgd(lr), topology, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    for t in range(T):
+        st, m = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)))
+    return st, eng
+
+
+def max_param_diff(a, b):
+    d = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)
+    return max(jax.tree.leaves(d))
+
+
+def test_n1_group_equals_local_sgd(setup):
+    ds, model = setup
+    st1, _ = run_T(model, ds, UniformTopology(two_level(N_WORKERS, 1, 8, 4)))
+    st2, _ = run_T(model, ds, UniformTopology(local_sgd(N_WORKERS, 4)))
+    assert max_param_diff(st1.params, st2.params) == 0.0
+
+
+def test_i_equals_g_is_local_sgd_p_g(setup):
+    ds, model = setup
+    st1, _ = run_T(model, ds, UniformTopology(two_level(N_WORKERS, 2, 8, 8)))
+    st2, _ = run_T(model, ds, UniformTopology(local_sgd(N_WORKERS, 8)))
+    assert max_param_diff(st1.params, st2.params) < 1e-6
+
+
+def test_uniform_equals_grouped(setup):
+    ds, model = setup
+    st1, _ = run_T(model, ds, UniformTopology(two_level(N_WORKERS, 2, 8, 4)))
+    st2, _ = run_T(model, ds, GroupedTopology(contiguous(N_WORKERS, 2), G=8, I=4))
+    assert max_param_diff(st1.params, st2.params) < 1e-5
+
+
+def test_sync_sgd_replicas_identical(setup):
+    ds, model = setup
+    st, _ = run_T(model, ds, UniformTopology(two_level(N_WORKERS, 2, 1, 1)), T=5)
+    d = jax.tree.map(lambda x: float(jnp.abs(x - x[0:1]).max()), st.params)
+    assert max(jax.tree.leaves(d)) == 0.0
+
+
+def test_replicas_diverge_between_syncs(setup):
+    ds, model = setup
+    st, _ = run_T(model, ds, UniformTopology(two_level(N_WORKERS, 2, 8, 4)), T=3)
+    d = jax.tree.map(lambda x: float(jnp.abs(x - x[0:1]).max()), st.params)
+    assert max(jax.tree.leaves(d)) > 1e-4  # non-IID shards => divergence
+
+
+def test_group_members_equal_after_local_sync(setup):
+    """After a local sync (t+1 = I), members of a group share params but
+    groups differ (until the global sync)."""
+    ds, model = setup
+    topo = UniformTopology(two_level(N_WORKERS, 2, 8, 4))
+    eng = HSGD(model.loss, sgd(0.05), topo, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    for t in range(4):  # t+1=4 = I -> local sync
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)))
+    w = st.params["h1"]["w"]  # (8, ...)
+    g1, g2 = w[:4], w[4:]
+    assert float(jnp.abs(g1 - g1[0:1]).max()) < 1e-6
+    assert float(jnp.abs(g2 - g2[0:1]).max()) < 1e-6
+    assert float(jnp.abs(g1[0] - g2[0]).max()) > 1e-5
+
+
+def test_heterogeneous_local_periods(setup):
+    """Theorem 1 allows different I_i per group; group with I=2 syncs at t+1=2
+    while the other (I=4) does not."""
+    ds, model = setup
+    topo = GroupedTopology(contiguous(N_WORKERS, 2), G=8, I=(2, 4))
+    eng = HSGD(model.loss, sgd(0.05), topo, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    for t in range(2):
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)))
+    w = st.params["h1"]["w"]
+    assert float(jnp.abs(w[:4] - w[0:1]).max()) < 1e-6     # group 1 synced
+    assert float(jnp.abs(w[4:] - w[4:5]).max()) > 1e-5     # group 2 did not
+
+
+def test_three_level_subsumption(setup):
+    """Algorithm D.1 break semantics: at t+1 = P_1 every level collapses to
+    the global average; at t+1 = P_2 only the level-2 subtrees align."""
+    ds, model = setup
+    spec = HierarchySpec(group_sizes=(2, 2, 2), periods=(8, 4, 2))
+    topo = UniformTopology(spec)
+    eng = HSGD(model.loss, sgd(0.05), topo, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    for t in range(4):  # t+1=4 = P_2
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)))
+    w = st.params["h1"]["w"].reshape(2, 4, -1)
+    for i in range(2):
+        assert float(jnp.abs(w[i] - w[i, 0:1]).max()) < 1e-6
+    assert float(jnp.abs(w[0, 0] - w[1, 0]).max()) > 1e-5
+    for t in range(4, 8):  # t+1=8 = P_1: global
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)))
+    w = st.params["h1"]["w"]
+    assert float(jnp.abs(w - w[0:1]).max()) < 1e-6
+
+
+def test_momentum_and_adam_states_aggregate(setup):
+    ds, model = setup
+    for opt in (momentum(0.05), adam(1e-2)):
+        topo = UniformTopology(two_level(N_WORKERS, 2, 4, 2))
+        eng = HSGD(model.loss, opt, topo, jit=True)
+        st = eng.init(jax.random.PRNGKey(0), model.init)
+        for t in range(4):
+            st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)))
+        m = st.opt_state["m"]["h1"]["w"]
+        assert float(jnp.abs(m - m[0:1]).max()) < 1e-6  # t+1=4=G -> all equal
+
+
+def test_loss_decreases_under_hsgd(setup):
+    ds, model = setup
+    topo = UniformTopology(two_level(N_WORKERS, 2, 8, 4))
+    eng = HSGD(model.loss, sgd(0.1), topo, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    gb = jax.tree.map(jnp.asarray, ds.global_batch(512))
+    l0 = float(model.loss(eng.mean_params(st), gb)[0])
+    for t in range(40):
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 16)))
+    l1 = float(model.loss(eng.mean_params(st), gb)[0])
+    assert l1 < l0 - 0.3, (l0, l1)
+
+
+def test_partial_participation_semantics(setup):
+    """Non-participants keep their params between syncs; at a sync they
+    receive the participants' average (paper Appendix E semantics)."""
+    import numpy as np
+    from repro.core import sample_participation
+    ds, model = setup
+    topo = UniformTopology(two_level(N_WORKERS, 2, 8, 4))
+    eng = HSGD(model.loss, sgd(0.05), topo, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    mask = np.zeros(N_WORKERS, bool)
+    mask[[0, 1, 4, 5]] = True   # 2 participants per group
+    p_before = jax.tree.map(lambda x: x.copy(), st.params)
+    # 3 pure-local steps: non-participants must not move at all
+    for t in range(3):
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)),
+                         mask=mask)
+    w = st.params["h1"]["w"]
+    w0 = p_before["h1"]["w"]
+    assert float(jnp.abs(w[2] - w0[2]).max()) == 0.0
+    assert float(jnp.abs(w[3] - w0[3]).max()) == 0.0
+    assert float(jnp.abs(w[0] - w0[0]).max()) > 1e-5
+    # 4th step = local sync: every group member gets the participants' mean
+    st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(3, 8)), mask=mask)
+    w = st.params["h1"]["w"]
+    assert float(jnp.abs(w[:4] - w[0:1]).max()) < 1e-6
+    assert float(jnp.abs(w[4:] - w[4:5]).max()) < 1e-6
+
+
+def test_participation_grouped_topology(setup):
+    import numpy as np
+    ds, model = setup
+    topo = GroupedTopology(contiguous(N_WORKERS, 2), G=4, I=2)
+    eng = HSGD(model.loss, sgd(0.05), topo, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    mask = np.array([True, True, False, False, True, False, True, False])
+    for t in range(4):  # includes a local sync (t+1=2) and global (t+1=4)
+        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 8)),
+                         mask=mask)
+    w = st.params["h1"]["w"]
+    # after global sync everyone holds the same model
+    assert float(jnp.abs(w - w[0:1]).max()) < 1e-6
+
+
+def test_sample_participation_at_least_one_per_group():
+    from repro.core import contiguous as contig, sample_participation
+    g = contig(12, 3)
+    for seed in range(5):
+        m = sample_participation(g, 0.25, seed)
+        for i in range(3):
+            assert m[g.members(i)].sum() >= 1
+    m2 = sample_participation((2, 4), 0.5, 0)
+    assert m2.shape == (8,) and m2[:4].sum() >= 1 and m2[4:].sum() >= 1
+
+
+def test_grad_accumulation_equals_large_batch(setup):
+    """SGD is linear in the gradient: accum_steps=2 over a batch equals one
+    step on the full batch, bitwise-ish."""
+    ds, model = setup
+    topo = UniformTopology(two_level(N_WORKERS, 2, 4, 2))
+    e1 = HSGD(model.loss, sgd(0.05), topo, jit=True, accum_steps=1)
+    e2 = HSGD(model.loss, sgd(0.05), topo, jit=True, accum_steps=2)
+    s1 = e1.init(jax.random.PRNGKey(0), model.init)
+    s2 = e2.init(jax.random.PRNGKey(0), model.init)
+    for t in range(4):
+        b = jax.tree.map(jnp.asarray, ds.batch(t, 8))
+        s1, m1 = e1.step(s1, b)
+        s2, m2 = e2.step(s2, b)
+    assert max_param_diff(s1.params, s2.params) < 1e-6

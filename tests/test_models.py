@@ -1,0 +1,139 @@
+"""Model-level correctness: prefill+decode == full forward for every family,
+masking semantics, RoPE properties, GQA equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.configs import ARCH_IDS, all_configs, reduced
+from repro.models import build_model
+
+CONFIGS = all_configs()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch, rng):
+    cfg = reduced(CONFIGS[arch])
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S, P = 2, 12, 9
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_inputs"] = jax.random.normal(rng, (B, 4, cfg.d_model),
+                                             dtype=jnp.float32)
+        full, _ = model.forward(params, toks, kw["enc_inputs"])
+    else:
+        full, _ = model.forward(params, toks)
+    lg, cache = model.prefill(params, toks[:, :P], max_len=S, **kw)
+    errs = [np.abs(np.asarray(lg) - np.asarray(full[:, P - 1])).max()]
+    for t in range(P, S):
+        lg, cache = model.decode_step(params, cache, toks[:, t])
+        errs.append(np.abs(np.asarray(lg) - np.asarray(full[:, t])).max())
+    assert max(errs) < 1e-4, (arch, errs)
+
+
+def test_causal_mask_window():
+    m = L.causal_mask(6, 6, window=3)
+    m = np.asarray(m)
+    for i in range(6):
+        for j in range(6):
+            assert m[i, j] == (j <= i and i - j < 3)
+
+
+def test_rope_preserves_norm_and_relative_phase(rng):
+    x = jax.random.normal(rng, (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = L.apply_rope(x, pos, 10_000.0)
+    # rotation preserves per-head vector norm
+    nx = np.linalg.norm(np.asarray(x), axis=-1)
+    ny = np.linalg.norm(np.asarray(y), axis=-1)
+    np.testing.assert_allclose(nx, ny, rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jax.random.normal(rng, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, 16))
+    def score(pq, pk):
+        qq = L.apply_rope(q, jnp.full((1, 1), pq), 10_000.0)
+        kk = L.apply_rope(k, jnp.full((1, 1), pk), 10_000.0)
+        return float(jnp.sum(qq * kk))
+    assert abs(score(3, 1) - score(7, 5)) < 1e-4
+
+
+def test_gqa_equals_repeated_mha(rng):
+    """GQA with kv repeated == full attention with explicitly repeated k/v."""
+    cfg = reduced(CONFIGS["qwen2-0.5b"])
+    p = L.attention_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model), dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    out = L.attention_apply(p, x, cfg, positions=pos)
+    # manual: repeat kv heads into an MHA-equivalent config
+    cfg_mha = dataclasses.replace(cfg, num_kv_heads=cfg.num_heads)
+    wk = jnp.concatenate([jnp.repeat(w, cfg.num_heads // cfg.num_kv_heads, axis=1)
+                          for w in [p["wk"].reshape(cfg.d_model, cfg.num_kv_heads,
+                                                    cfg.d_head)]], axis=0)
+    p2 = dict(p)
+    p2["wk"] = jnp.repeat(p["wk"].reshape(cfg.d_model, cfg.num_kv_heads,
+                                          cfg.d_head),
+                          cfg.num_heads // cfg.num_kv_heads,
+                          axis=1).reshape(cfg.d_model, -1)
+    p2["wv"] = jnp.repeat(p["wv"].reshape(cfg.d_model, cfg.num_kv_heads,
+                                          cfg.d_head),
+                          cfg.num_heads // cfg.num_kv_heads,
+                          axis=1).reshape(cfg.d_model, -1)
+    p2["bk"] = jnp.repeat(p["bk"].reshape(cfg.num_kv_heads, cfg.d_head),
+                          cfg.num_heads // cfg.num_kv_heads, axis=0).reshape(-1)
+    p2["bv"] = jnp.repeat(p["bv"].reshape(cfg.num_kv_heads, cfg.d_head),
+                          cfg.num_heads // cfg.num_kv_heads, axis=0).reshape(-1)
+    out2 = L.attention_apply(p2, x, cfg_mha, positions=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_attention_matches_dense(rng):
+    q = jax.random.normal(rng, (2, 1024, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, 1024, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, 1024, 4, 16))
+    mask = L.causal_mask(1024, 1024, window=64)
+    dense = L._attn_core_dense(q, k, v, mask, None)
+    chunk = L._attn_core_chunked(q, k, v, mask, None, 256)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunk),
+                               atol=2e-5, rtol=1e-4)
+    # gradients too (checkpointed body)
+    g1 = jax.grad(lambda q: L._attn_core_dense(q, k, v, mask, None).sum())(q)
+    g2 = jax.grad(lambda q: L._attn_core_chunked(q, k, v, mask, None, 256).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_moe_group_capacity_flops_bound(rng):
+    """Group-chunked MoE equals single-group MoE when no tokens drop."""
+    cfg = reduced(CONFIGS["mixtral-8x22b"])
+    p = L.moe_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model), dtype=jnp.float32)
+    y1, a1 = L.moe_apply(p, x, cfg)
+    # same computation via the internal group fn directly
+    y2, a2 = L._moe_group(p, x.reshape(16, cfg.d_model), cfg)
+    np.testing.assert_allclose(np.asarray(y1).reshape(16, -1), np.asarray(y2),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_sliding_window_blocks_far_tokens(rng):
+    """With window=2, changing token 0 must not affect outputs at pos >= 4
+    in a single local-attention layer."""
+    cfg = dataclasses.replace(reduced(CONFIGS["gemma3-12b"]),
+                              block_pattern=("local",), num_layers=1,
+                              sliding_window=2)
+    from repro.models.transformer import block_apply, block_init
+    p = block_init(rng, "local", cfg)
+    x = jax.random.normal(rng, (1, 8, cfg.d_model), dtype=jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    y1, _ = block_apply(p, x, "local", cfg, positions=pos)
+    x2 = x.at[0, 0].add(1.0)
+    y2, _ = block_apply(p, x2, "local", cfg, positions=pos)
+    # positions >= 2 cannot see token 0 (window=2 means j > i-2)
+    np.testing.assert_allclose(np.asarray(y1[0, 2:]), np.asarray(y2[0, 2:]),
+                               atol=1e-5)
+    assert np.abs(np.asarray(y1[0, 0]) - np.asarray(y2[0, 0])).max() > 1e-3

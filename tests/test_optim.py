@@ -1,0 +1,66 @@
+"""Optimizer + schedule unit tests vs closed forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adam, constant, cosine, linear_warmup, momentum, sgd
+
+
+def _step(opt, params, grads, state):
+    upd, state = opt.update(grads, state, params)
+    return jax.tree.map(jnp.add, params, upd), state
+
+
+def test_sgd_closed_form():
+    opt = sgd(0.1)
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.full(3, 2.0)}
+    s = opt.init(p)
+    p, s = _step(opt, p, g, s)
+    np.testing.assert_allclose(np.asarray(p["w"]), 1.0 - 0.1 * 2.0)
+
+
+def test_momentum_closed_form():
+    opt = momentum(0.1, beta=0.5)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    s = opt.init(p)
+    p, s = _step(opt, p, g, s)   # m=1, p=-0.1
+    p, s = _step(opt, p, g, s)   # m=1.5, p=-0.25
+    np.testing.assert_allclose(np.asarray(p["w"]), -0.25, rtol=1e-6)
+
+
+def test_adam_first_step_magnitude():
+    opt = adam(1e-3)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5, 10.0])}
+    s = opt.init(p)
+    p, s = _step(opt, p, g, s)
+    # bias-corrected first step = -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p["w"]),
+                               -1e-3 * np.sign([1, -2, 0.5, 10]), rtol=1e-4)
+
+
+def test_sgd_with_schedule():
+    sched = linear_warmup(1.0, 4)
+    opt = sgd(sched)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    s = opt.init(p)
+    deltas = []
+    for _ in range(4):
+        p2, s = _step(opt, p, g, s)
+        deltas.append(float((p2["w"] - p["w"])[0]))
+        p = p2
+    np.testing.assert_allclose(deltas, [-0.25, -0.5, -0.75, -1.0], rtol=1e-6)
+
+
+def test_cosine_schedule_endpoints():
+    f = cosine(1.0, total_steps=100, warmup_steps=0, final_fraction=0.1)
+    assert abs(float(f(jnp.asarray(0))) - 1.0) < 0.01
+    assert abs(float(f(jnp.asarray(100))) - 0.1) < 0.01
+    assert float(f(jnp.asarray(50))) > 0.1
+
+
+def test_constant():
+    assert float(constant(0.3)(jnp.asarray(5))) == np.float32(0.3)

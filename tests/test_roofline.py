@@ -1,0 +1,111 @@
+"""Roofline machinery tests: HLO cost model vs XLA on loop-free modules,
+trip-count awareness, collective parsing, hardware-term arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import HW, RooflineReport
+from repro.roofline.hlo_cost import ModuleCost, analyze_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_flops_match_xla_on_unrolled(rng):
+    d = 64
+    W = jax.random.normal(rng, (8, d, d))
+    x = jax.random.normal(rng, (4, d))
+
+    def unrolled(x, W):
+        for i in range(8):
+            x = jnp.tanh(x @ W[i])
+        return x.sum()
+
+    comp = _compile(unrolled, x, W)
+    xla = comp.cost_analysis()
+    if isinstance(xla, list):
+        xla = xla[0]
+    mine = analyze_hlo(comp.as_text())
+    assert abs(mine.flops - float(xla["flops"])) / float(xla["flops"]) < 0.02
+    assert abs(mine.bytes - float(xla["bytes accessed"])) / \
+        float(xla["bytes accessed"]) < 0.10
+
+
+def test_while_trip_count_multiplies(rng):
+    d = 32
+    W = jax.random.normal(rng, (16, d, d))
+    x = jax.random.normal(rng, (4, d))
+
+    def scanned(x, W):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, W)
+        return y.sum()
+
+    def unrolled(x, W):
+        for i in range(16):
+            x = jnp.tanh(x @ W[i])
+        return x.sum()
+
+    f_scan = analyze_hlo(_compile(scanned, x, W).as_text()).flops
+    f_unroll = analyze_hlo(_compile(unrolled, x, W).as_text()).flops
+    assert abs(f_scan - f_unroll) / f_unroll < 0.02
+    # and the analytic count
+    analytic = 16 * 2 * 4 * d * d
+    assert abs(f_scan - analytic) / analytic < 0.05
+
+
+def test_dot_flops_exact(rng):
+    a = jax.random.normal(rng, (32, 48))
+    b = jax.random.normal(rng, (48, 16))
+    comp = _compile(lambda a, b: a @ b, a, b)
+    mine = analyze_hlo(comp.as_text())
+    assert mine.flops == pytest.approx(2 * 32 * 48 * 16, rel=0.01)
+
+
+def test_nested_scan_multiplies(rng):
+    d = 16
+    W = jax.random.normal(rng, (4, d, d))
+
+    def nested(x, W):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(inner, x, None, length=5)
+            return x, None
+        y, _ = jax.lax.scan(outer, x, W)
+        return y.sum()
+
+    x = jax.random.normal(rng, (2, d))
+    mine = analyze_hlo(_compile(nested, x, W).as_text())
+    analytic = 4 * 5 * 2 * 2 * d * d
+    assert abs(mine.flops - analytic) / analytic < 0.10
+
+
+def test_roofline_terms_arithmetic():
+    r = RooflineReport(name="x", flops_per_chip=197e12, bytes_per_chip=819e9,
+                       coll_intra=50e9, coll_cross=25e9,
+                       coll_by_kind={}, peak_memory_bytes=None, hw=HW())
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(2.0)  # 1s ICI + 1s DCI
+    assert r.dominant == "collective"
+
+
+def test_iota_replica_group_cross_pod_detection():
+    from repro.roofline.hlo_cost import Instr, ModuleCost
+    mc = ModuleCost("", pod_size=256)
+    # groups spanning both pods of a (2,16,16) mesh
+    ins = Instr("x", [("f32", (4,))], "all-reduce", ["y"],
+                ", replica_groups=[16,32]<=[2,16,16]T(1,0,2), "
+                "use_global_device_ids=true")
+    nbytes, cross = mc._collective(ins)
+    assert nbytes == 16
+    assert cross is True
+    ins2 = Instr("x", [("f32", (4,))], "all-reduce", ["y"],
+                 ", replica_groups=[32,16]<=[2,16,16]T(2,0,1), "
+                 "use_global_device_ids=true")
+    _, cross2 = mc._collective(ins2)
+    assert cross2 is False  # groups within one pod's model axis

@@ -1,0 +1,254 @@
+"""Property-based tests (hypothesis) for the paper's algebra:
+eq. (10) partition identity, Lemma 1/2 exact expectations under exhaustive
+random grouping, sandwich inequalities (16)(17)(23)(24), bound recoveries,
+and the Appendix A.1 mixing-matrix spectrum claim."""
+import itertools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Grouping, contiguous, downward_divergence_avg,
+                        global_divergence, group_iid, group_noniid,
+                        partition_residual, random_grouping, upward_divergence)
+from repro.core import theory as th
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# eq. (10): partition identity — exact for ANY gradients and ANY grouping
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 12), st.integers(1, 4), st.integers(0, 10**6))
+def test_partition_identity(n, dim, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n, dim)))
+    N = rng.integers(1, n + 1)
+    assignment = rng.integers(0, N, size=n)
+    # densify group ids
+    _, dense = np.unique(assignment, return_inverse=True)
+    grp = Grouping(tuple(dense))
+    res = float(partition_residual(g, grp))
+    scale = float(global_divergence(g)) + 1e-9
+    assert abs(res) / scale < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Lemmas 1 & 2: E_S[upward] == (N-1)/(n-1) * eps_w^2 exactly (eq. C.5),
+# via exhaustive enumeration of equal-size groupings for small n
+# ---------------------------------------------------------------------------
+def _all_equal_partitions(n, N):
+    """All ways to split range(n) into N unordered groups of size n//N."""
+    k = n // N
+    items = list(range(n))
+
+    def rec(remaining):
+        if not remaining:
+            yield []
+            return
+        first = remaining[0]
+        rest = remaining[1:]
+        for combo in itertools.combinations(rest, k - 1):
+            grp = (first,) + combo
+            left = [x for x in rest if x not in combo]
+            for tail in rec(left):
+                yield [grp] + tail
+
+    yield from rec(items)
+
+
+@pytest.mark.parametrize("n,N", [(4, 2), (6, 2), (6, 3)])
+def test_lemma1_lemma2_exhaustive(n, N):
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(n, 3)))
+    gbar = g.mean(0)
+    eps_w2 = float(jnp.mean(jnp.sum((g - gbar) ** 2, axis=1)))
+    ups, downs = [], []
+    for parts in _all_equal_partitions(n, N):
+        a = np.empty(n, np.int64)
+        for i, grp in enumerate(parts):
+            for j in grp:
+                a[j] = i
+        grp_obj = Grouping(tuple(a))
+        ups.append(float(upward_divergence(g, grp_obj)))
+        downs.append(float(downward_divergence_avg(g, grp_obj)))
+    exp_up = np.mean(ups)
+    exp_down = np.mean(downs)
+    np.testing.assert_allclose(exp_up, (N - 1) / (n - 1) * eps_w2, rtol=1e-5)
+    np.testing.assert_allclose(exp_down,
+                               (1 - (N - 1) / (n - 1)) * eps_w2, rtol=1e-5)
+    # lemma statements as bounds with eps_tilde >= eps_w
+    assert exp_up <= th.lemma1_rhs(n, N, eps_w2) + 1e-9
+    assert exp_down <= th.lemma2_rhs(n, N, eps_w2) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# sandwich inequalities
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 6), st.integers(1, 5), st.integers(1, 5),
+       st.integers(2, 6))
+def test_sandwich_16_17(logn, m_i, m_g, N):
+    n = N * (2 ** logn)
+    I = 2 ** m_i
+    G = I * (2 ** m_g)
+    lo, mid, hi = th.sandwich_noise_terms(n, N, G, I)
+    assert lo - 1e-12 <= mid <= hi + 1e-12
+    lo, mid, hi = th.sandwich_div_terms(n, N, G, I)
+    assert lo - 1e-12 <= mid <= hi + 1e-12
+
+
+@given(st.integers(2, 4), st.integers(2, 4), st.integers(2, 3),
+       st.integers(1, 3))
+def test_sandwich_multilevel_23_24(n1, n2, n3, base):
+    group_sizes = (n1, n2, n3)
+    periods = (base * 8, base * 4, base * 2)
+    n = n1 * n2 * n3
+    M = 3
+    a1 = np.mean([th.theorem3_A1(l, periods, group_sizes) for l in (1, 2)])
+    a2 = np.mean([th.theorem3_A2(l, periods, group_sizes) for l in (1, 2)])
+    assert (1 - 1 / n) * periods[-1] - 1e-9 <= a1 <= (1 - 1 / n) * periods[0] + 1e-9
+    assert periods[-1] ** 2 - 1e-9 <= a2 <= periods[0] ** 2 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# bound recoveries and orderings
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 64), st.integers(1, 6), st.floats(0.0, 2.0),
+       st.floats(0.0, 2.0))
+def test_thm1_recovers_corollary1(n, logp, sigma2, eps2):
+    P = 2 ** logp
+    gamma = 0.9 * th.lr_cap(P, 1.0)
+    b1 = th.theorem1_bound(gamma=gamma, T=500, L=1.0, sigma2=sigma2,
+                           f0_minus_fstar=1.0, n=n, G=P, group_sizes=[n],
+                           I_periods=[P], eps_up2=0.0, eps_down2=[eps2])
+    b2 = th.corollary1_local_sgd_bound(gamma=gamma, T=500, L=1.0,
+                                       sigma2=sigma2, f0_minus_fstar=1.0,
+                                       n=n, P=P, eps_tilde2=eps2)
+    assert math.isclose(b1, b2, rel_tol=1e-12)
+
+
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3),
+       st.floats(0.01, 1.0), st.floats(0.0, 1.0))
+def test_thm3_reduces_to_thm2(logN, logK, m, sigma2, eps2):
+    N, K = 2 ** logN, 2 ** logK
+    n = N * K
+    if n < 4:
+        return
+    I = 4
+    G = I * (2 ** m)
+    gamma = 0.9 * th.lr_cap(G, 1.0)
+    kw = dict(gamma=gamma, T=1000, L=1.0, sigma2=sigma2,
+              f0_minus_fstar=1.0, eps_tilde2=eps2)
+    b2 = th.theorem2_bound(n=n, N=N, G=G, I=I, **kw)
+    b3 = th.theorem3_bound(periods=(G, I), group_sizes=(N, K), **kw)
+    assert math.isclose(b2, b3, rel_tol=1e-10)
+
+
+@given(st.integers(1, 4), st.floats(0.1, 1.0), st.floats(0.1, 1.0))
+def test_hsgd_bound_between_local_sgd_bounds(logN, sigma2, eps2):
+    """Theorem 2's bound sits between local SGD at P=I and P=G (Remark 4)."""
+    N = 2 ** logN
+    n = N * 4
+    I, G = 4, 16
+    gamma = 0.9 * th.lr_cap(G, 1.0)
+    kw = dict(gamma=gamma, T=2000, L=1.0, sigma2=sigma2, f0_minus_fstar=1.0)
+    mid = th.theorem2_bound(n=n, N=N, G=G, I=I, eps_tilde2=eps2, **kw)
+    lo = th.corollary1_local_sgd_bound(n=n, P=I, eps_tilde2=eps2, **kw)
+    hi = th.corollary1_local_sgd_bound(n=n, P=G, eps_tilde2=eps2, **kw)
+    assert lo - 1e-12 <= mid <= hi + 1e-12
+
+
+def test_table1_ours_tightest_representative():
+    """Table 1 claim at a representative operating point: our bound is the
+    tightest; Liu'20 compares at sigma2=0, Castiglia'21 at eps2=0."""
+    n, N, T, G, I = 32, 4, 10_000, 50, 5
+    s2, e2 = 1.0, 1.0
+    ours = th.table1_ours(n, N, T, G, I, s2, e2)
+    yu = th.table1_yu2019(n, T, G, s2, e2)
+    assert ours < yu
+    ours_nonoise = th.table1_ours(n, N, T, G, I, 0.0, e2)
+    liu = th.table1_liu2020(n, T, G, e2)
+    assert ours_nonoise < liu
+    ours_iid = th.table1_ours(n, N, T, G, I, s2, 0.0)
+    cast = th.table1_castiglia2021(n, T, G, I, s2)
+    assert ours_iid < cast
+
+
+# ---------------------------------------------------------------------------
+# groupings
+# ---------------------------------------------------------------------------
+def test_mixing_matrix_spectrum_appendix_a1():
+    """A_loc has eigenvalue 1 with multiplicity N (so decentralized-SGD
+    analysis, which needs |lambda_2| < 1, does not apply)."""
+    grp = contiguous(12, 3)
+    A = grp.local_matrix()
+    ev = np.sort(np.abs(np.linalg.eigvals(A)))[::-1]
+    assert np.sum(np.isclose(ev, 1.0)) == 3
+    # doubly stochastic
+    np.testing.assert_allclose(A.sum(1), 1.0)
+    np.testing.assert_allclose(A.sum(0), 1.0)
+
+
+def test_group_iid_minimizes_upward_divergence():
+    rng = np.random.default_rng(0)
+    labels = np.arange(16) % 8
+    # gradient direction determined by label
+    basis = rng.normal(size=(8, 5))
+    g = jnp.asarray(basis[labels] + 0.01 * rng.normal(size=(16, 5)))
+    up_iid = float(upward_divergence(g, group_iid(labels, 2)))
+    up_non = float(upward_divergence(g, group_noniid(labels, 2)))
+    assert up_iid < 0.05 * up_non
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 100))
+def test_random_grouping_valid(logN, logK, seed):
+    N, K = 2 ** logN, 2 ** logK
+    grp = random_grouping(N * K, N, seed)
+    assert sorted(grp.sizes) == [K] * N
+
+
+# ---------------------------------------------------------------------------
+# planner + diversity grouping (operationalizing Remark 2 / the conclusion)
+# ---------------------------------------------------------------------------
+def test_planner_prefers_hsgd_when_far_rounds_expensive():
+    from repro.core import CommModel, best_under_budget, enumerate_plans, pareto_front
+    comm = CommModel(compute_s=0.004, local_round_s=0.0003,
+                     global_round_s=0.0045)  # paper Table E.1 CNN numbers
+    plans = enumerate_plans(n=32, T=5000, L=1.0, sigma2=1.0, eps_tilde2=1.0,
+                            f0_minus_fstar=1.0, comm=comm)
+    assert plans
+    # pure-sync extreme (G=I small) must be strictly slower wall-clock than
+    # an H-SGD plan with the same bound neighborhood
+    front = pareto_front(plans)
+    assert len(front) >= 2
+    # budget slightly above the cheapest plan: best plan uses I < G
+    cheapest = min(p.wall_s for p in plans)
+    best = best_under_budget(plans, cheapest * 1.15)
+    assert best is not None and best.I < best.G
+
+
+def test_planner_budget_monotonicity():
+    from repro.core import CommModel, best_under_budget, enumerate_plans
+    comm = CommModel(0.004, 0.0003, 0.0045)
+    plans = enumerate_plans(n=16, T=2000, L=1.0, sigma2=0.5, eps_tilde2=0.5,
+                            f0_minus_fstar=1.0, comm=comm)
+    b_lo = best_under_budget(plans, min(p.wall_s for p in plans) * 1.05)
+    b_hi = best_under_budget(plans, max(p.wall_s for p in plans))
+    assert b_hi.bound <= b_lo.bound + 1e-12  # more budget never hurts
+
+
+def test_diversity_grouping_beats_random_upward_divergence():
+    from repro.core import diversity_grouping, random_grouping
+    rng = np.random.default_rng(0)
+    # 16 workers, gradients clustered by 4 latent classes
+    basis = rng.normal(size=(4, 8)) * 3
+    labels = np.arange(16) % 4
+    g = basis[labels] + 0.05 * rng.normal(size=(16, 8))
+    gj = jnp.asarray(g)
+    div = upward_divergence(gj, diversity_grouping(g, 4))
+    rand = np.mean([float(upward_divergence(gj, random_grouping(16, 4, s)))
+                    for s in range(20)])
+    assert float(div) < 0.25 * rand, (float(div), rand)

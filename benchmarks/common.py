@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HSGD, GroupedTopology, HierarchySpec, UniformTopology
+from repro.core import HSGD, HierarchySpec, make_topology
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
@@ -36,21 +36,69 @@ def make_world(n_workers: int = 8, num_classes: int = 8, dim: int = 24,
 
 
 def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
-               bs: int = 10, eval_every: int = 8) -> List[Dict]:
+               bs: int = 10, eval_every: int = 8,
+               use_rounds: bool = False) -> List[Dict]:
+    """use_rounds=True runs the schedule-compiled ``run_rounds`` executor
+    (same trajectory — tested — fewer dispatches); eval points then land on
+    the round boundaries hit by ``eval_every``."""
+    if isinstance(topology, HierarchySpec):
+        topology = make_topology(topology)
     eng = HSGD(model.loss, sgd(lr), topology, jit=True)
     st = eng.init(jax.random.PRNGKey(seed), model.init)
     gb = jax.tree.map(jnp.asarray, ds.global_batch(640))
+
+    def evaluate(state):
+        wbar = eng.mean_params(state)
+        return {"loss": float(model.loss(wbar, gb)[0]),
+                "acc": float(model.accuracy(wbar, gb))}
+
+    batch_fn = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, bs))
+    if use_rounds:
+        st, hist = eng.run_rounds(
+            st, batch_fn, T, eval_every=eval_every,
+            eval_fn=lambda state, t: evaluate(state))
+        return [{"step": rec["t"], "loss": rec["loss"], "acc": rec["acc"]}
+                for rec in hist if "acc" in rec]
     hist = []
     for t in range(T):
-        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, bs)))
+        st, _ = eng.step(st, batch_fn(t))
         if (t + 1) % eval_every == 0 or t + 1 == T:
-            wbar = eng.mean_params(st)
-            hist.append({
-                "step": t + 1,
-                "loss": float(model.loss(wbar, gb)[0]),
-                "acc": float(model.accuracy(wbar, gb)),
-            })
+            hist.append({"step": t + 1, **evaluate(st)})
     return hist
+
+
+def steps_per_sec(ds, model, topology, T: int = 256, lr: float = 0.08,
+                  bs: int = 10, use_rounds: bool = False,
+                  warmup: int = 32) -> float:
+    """Wall-clock throughput of the trajectory harness (no evals): the
+    per-step dispatcher vs the schedule-compiled round executor."""
+    if isinstance(topology, HierarchySpec):
+        topology = make_topology(topology)
+    eng = HSGD(model.loss, sgd(lr), topology, jit=True)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    # warmup must span >= one full global period so EVERY step/round
+    # signature compiles before the timed region, and end on a period
+    # boundary so the timed region is phase-aligned with the cached rounds
+    G = topology.periods[0]
+    warmup = -(-max(warmup, G) // G) * G
+    batches = [jax.tree.map(jnp.asarray, ds.batch(t, bs))
+               for t in range(T + warmup)]
+    batch_fn = lambda t: batches[t]
+
+    def go(state, t0, steps):
+        if use_rounds:
+            state, _ = eng.run_rounds(state, batch_fn, steps)
+        else:
+            for t in range(t0, t0 + steps):
+                state, _ = eng.step(state, batch_fn(t))
+        return state
+
+    st = go(st, 0, warmup)  # compile + cache every round/step signature
+    jax.block_until_ready(st.params)
+    t0 = time.time()
+    st = go(st, warmup, T)
+    jax.block_until_ready(st.params)
+    return T / (time.time() - t0)
 
 
 def mean_trajectories(ds, model, topo_fn, T, seeds=(0, 1, 2), **kw):
@@ -69,18 +117,12 @@ def comm_time_ms(spec: HierarchySpec, steps: int, model_kind: str = "cnn",
     a near round; every level-1 (global) aggregation a far round; single-level
     local SGD always pays the far cost (workers -> global server)."""
     c = COMM_MS[model_kind]
+    counts = spec.sync_counts(steps)
     total = steps * COMPUTE_MS_PER_ITER
-    for t in range(steps):
-        lvl = spec.sync_level(t)
-        if lvl is None:
-            continue
-        if spec.num_levels == 1:
-            total += c["far"] if single_level_is_far else c["near"]
-        elif lvl == 1:
-            total += c["far"]
-        else:
-            total += c["near"]
-    return total
+    if spec.num_levels == 1:
+        return total + counts[0] * (c["far"] if single_level_is_far
+                                    else c["near"])
+    return total + counts[0] * c["far"] + sum(counts[1:]) * c["near"]
 
 
 def time_to_target(hist: List[Dict], spec: HierarchySpec, target_acc: float,

@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import make_world, mean_trajectories
-from repro.core import UniformTopology, local_sgd, two_level
+from repro.core import make_topology
 
 N_WORKERS = 8
 
@@ -25,11 +25,11 @@ def main(quick: bool = True):
         return mean_trajectories(ds, model, topo_fn, T, seeds=seeds)[-1]
 
     res = {
-        "localSGD_P=I": run(lambda: UniformTopology(local_sgd(N_WORKERS, I))),
-        "hsgd_N2": run(lambda: UniformTopology(two_level(N_WORKERS, 2, G, I))),
-        "hsgd_N4": run(lambda: UniformTopology(two_level(N_WORKERS, 4, G, I))),
-        "localSGD_P=G": run(lambda: UniformTopology(local_sgd(N_WORKERS, G))),
-        "hsgd_G64_I2": run(lambda: UniformTopology(two_level(N_WORKERS, 2, 64, 2))),
+        "localSGD_P=I": run(lambda: make_topology("local_sgd", n=N_WORKERS, P=I)),
+        "hsgd_N2": run(lambda: make_topology("two_level", n=N_WORKERS, N=2, G=G, I=I)),
+        "hsgd_N4": run(lambda: make_topology("two_level", n=N_WORKERS, N=4, G=G, I=I)),
+        "localSGD_P=G": run(lambda: make_topology("local_sgd", n=N_WORKERS, P=G)),
+        "hsgd_G64_I2": run(lambda: make_topology("two_level", n=N_WORKERS, N=2, G=64, I=2)),
     }
     print("# Fig 3a/3b — sandwich + G-up/I-down (mean final loss/acc, "
           f"T={T}, n={N_WORKERS})")

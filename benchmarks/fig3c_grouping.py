@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_world, mean_trajectories
-from repro.core import (GroupedTopology, all_divergences, diversity_grouping,
-                        group_iid, group_noniid, per_worker_grads)
+from repro.core import (all_divergences, diversity_grouping, group_iid,
+                        group_noniid, make_topology, per_worker_grads)
 
 N_WORKERS = 8
 
@@ -25,13 +25,13 @@ def main(quick: bool = True):
     g_iid = group_iid(labels, 2)
     g_non = group_noniid(labels, 2)
 
-    iid = mean_trajectories(ds, model, lambda: GroupedTopology(g_iid, G=G, I=I),
+    iid = mean_trajectories(ds, model, lambda: make_topology("grouped", grouping=g_iid, G=G, I=I),
                             T, seeds=seeds)[-1]
-    non = mean_trajectories(ds, model, lambda: GroupedTopology(g_non, G=G, I=I),
+    non = mean_trajectories(ds, model, lambda: make_topology("grouped", grouping=g_non, G=G, I=I),
                             T, seeds=seeds)[-1]
     # Fig 3c second claim: group-IID ~ group-non-IID with I halved
     non_i2 = mean_trajectories(ds, model,
-                               lambda: GroupedTopology(g_non, G=G, I=I // 2),
+                               lambda: make_topology("grouped", grouping=g_non, G=G, I=I // 2),
                                T, seeds=seeds)[-1]
 
     # measured divergences at w0 (the mechanism)
@@ -46,7 +46,7 @@ def main(quick: bool = True):
     g_auto = diversity_grouping(np.asarray(grads), 2)
     div_auto = all_divergences(grads, g_auto)
     auto = mean_trajectories(ds, model,
-                             lambda: GroupedTopology(g_auto, G=G, I=I),
+                             lambda: make_topology("grouped", grouping=g_auto, G=G, I=I),
                              T, seeds=seeds)[-1]
 
     print(f"# Fig 3c — grouping (T={T})")

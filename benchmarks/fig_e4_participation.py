@@ -9,8 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_world
-from repro.core import (HSGD, UniformTopology, local_sgd, sample_participation,
-                        two_level)
+from repro.core import (HSGD, local_sgd, make_topology,
+                        sample_participation, two_level)
 from repro.optim import sgd
 
 N_WORKERS = 16
@@ -18,7 +18,7 @@ FRAC = 0.5
 
 
 def run(ds, model, spec, T, seed, frac=FRAC):
-    topo = UniformTopology(spec)
+    topo = make_topology(spec)
     eng = HSGD(model.loss, sgd(0.08), topo, jit=True)
     st = eng.init(jax.random.PRNGKey(seed), model.init)
     sizes = (spec.group_sizes[0],

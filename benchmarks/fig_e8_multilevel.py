@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import make_world, mean_trajectories
-from repro.core import HierarchySpec, UniformTopology, local_sgd
+from repro.core import HierarchySpec, local_sgd, make_topology
 
 N_WORKERS = 8
 
@@ -16,7 +16,7 @@ def main(quick: bool = True):
     seeds = (0, 1, 2) if quick else tuple(range(6))
 
     def run(spec):
-        return mean_trajectories(ds, model, lambda: UniformTopology(spec), T,
+        return mean_trajectories(ds, model, lambda: make_topology(spec), T,
                                  seeds=seeds)[-1]
 
     res = {

@@ -7,7 +7,7 @@ import numpy as np
 
 from benchmarks.common import (comm_time_ms, make_world, mean_trajectories,
                                time_to_target)
-from repro.core import UniformTopology, local_sgd, two_level
+from repro.core import local_sgd, make_topology, two_level
 
 N_WORKERS = 8
 
@@ -27,7 +27,7 @@ def main(quick: bool = True):
     rows = []
     for name, spec in configs.items():
         hist = mean_trajectories(ds, model,
-                                 lambda s=spec: UniformTopology(s), T,
+                                 lambda s=spec: make_topology(s), T,
                                  seeds=seeds, eval_every=4)
         t_ms = time_to_target(hist, spec, target, model_kind="cnn")
         total_ms = comm_time_ms(spec, T, "cnn")

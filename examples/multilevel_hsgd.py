@@ -7,7 +7,7 @@ the Fig. E.8 behaviour: mid-level aggregation between the extremes.
 import jax
 import jax.numpy as jnp
 
-from repro.core import HSGD, HierarchySpec, UniformTopology, local_sgd
+from repro.core import HSGD, HierarchySpec, local_sgd, make_topology
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
@@ -20,10 +20,10 @@ gb = jax.tree.map(jnp.asarray, ds.global_batch())
 
 
 def run(name, spec, T=96):
-    eng = HSGD(model.loss, sgd(0.08), UniformTopology(spec))
+    eng = HSGD(model.loss, sgd(0.08), make_topology("uniform", spec=spec))
     st = eng.init(jax.random.PRNGKey(0), model.init)
-    for t in range(T):
-        st, _ = eng.step(st, jax.tree.map(jnp.asarray, ds.batch(t, 10)))
+    st, _ = eng.run_rounds(
+        st, lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 10)), T)
     wbar = eng.mean_params(st)
     print(f"{name:28s} final global loss "
           f"{float(model.loss(wbar, gb)[0]):.4f}")

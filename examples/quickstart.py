@@ -5,7 +5,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import HSGD, UniformTopology, two_level
+from repro.core import HSGD, make_topology
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
@@ -19,14 +19,27 @@ model = SimpleModel(SimpleConfig(kind="mlp", input_dim=24, hidden=32,
 
 # H-SGD: 2 groups x 4 workers; local aggregation every I=4 steps (cheap,
 # within a group), global aggregation every G=16 steps (expensive)
-engine = HSGD(model.loss, sgd(0.08), UniformTopology(two_level(8, 2, G=16, I=4)))
+topology = make_topology("two_level", n=8, N=2, G=16, I=4)
+engine = HSGD(model.loss, sgd(0.08), topology)
 state = engine.init(jax.random.PRNGKey(0), model.init)
 
 gb = jax.tree.map(jnp.asarray, ds.global_batch())
-for t in range(96):
-    state, metrics = engine.step(state, jax.tree.map(jnp.asarray, ds.batch(t, 10)))
-    if (t + 1) % 16 == 0:  # w-bar is observable at global boundaries
-        wbar = engine.mean_params(state)
-        print(f"step {t+1:3d}  sync=level-{engine.topology.step_kind(t)[1]}  "
-              f"global loss {float(model.loss(wbar, gb)[0]):.4f}  "
-              f"acc {float(model.accuracy(wbar, gb)):.3f}")
+
+
+def evaluate(state, t):
+    wbar = engine.mean_params(state)  # observable at global boundaries
+    return {"loss": float(model.loss(wbar, gb)[0]),
+            "acc": float(model.accuracy(wbar, gb))}
+
+
+# the schedule-compiled executor: each pure-local block between sync events
+# runs as ONE jitted lax.scan call instead of per-step dispatch
+state, history = engine.run_rounds(
+    state, lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 10)), T=96,
+    eval_every=16, eval_fn=evaluate)
+
+for rec in history:
+    if "acc" in rec:
+        event = engine.topology.event_at(rec["t"] - 1)
+        print(f"step {rec['t']:3d}  sync=level-{event.level}  "
+              f"global loss {rec['loss']:.4f}  acc {rec['acc']:.3f}")

@@ -1,5 +1,10 @@
 """The paper's primary contribution: hierarchical SGD as a composable
-JAX training feature (engine, topologies, groupings, divergences, bounds)."""
+JAX training feature (engine, topologies, aggregators, groupings,
+divergences, bounds)."""
+from repro.core.aggregators import (Aggregator, CompressedAggregator,
+                                    MeanAggregator, SignSGDAggregator,
+                                    WeightedAggregator, make_aggregator,
+                                    register_aggregator)
 from repro.core.divergence import (all_divergences, downward_divergence_avg,
                                    downward_divergences, flatten_pytree_batch,
                                    global_divergence, partition_residual,
@@ -8,14 +13,21 @@ from repro.core.grouping import (Grouping, contiguous, diversity_grouping,
                                  group_iid, group_noniid, random_grouping,
                                  sample_participation)
 from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
+from repro.core.hsgd import (HSGD, HSGDState, Round, compile_schedule, run)
 from repro.core.planner import (CommModel, PlanPoint, best_under_budget,
                                 enumerate_plans, fastest_under_bound,
                                 pareto_front)
-from repro.core.hsgd import (HSGD, GroupedTopology, HSGDState, UniformTopology,
-                             run)
+from repro.core.topology import (GroupedTopology, SyncEvent, Topology,
+                                 UniformTopology, make_topology,
+                                 register_topology)
 
 __all__ = [
-    "HSGD", "HSGDState", "GroupedTopology", "UniformTopology", "run",
+    "HSGD", "HSGDState", "Round", "compile_schedule", "run",
+    "Topology", "SyncEvent", "GroupedTopology", "UniformTopology",
+    "make_topology", "register_topology",
+    "Aggregator", "MeanAggregator", "CompressedAggregator",
+    "WeightedAggregator", "SignSGDAggregator", "make_aggregator",
+    "register_aggregator",
     "HierarchySpec", "local_sgd", "two_level",
     "CommModel", "PlanPoint", "best_under_budget", "enumerate_plans",
     "fastest_under_bound", "pareto_front",

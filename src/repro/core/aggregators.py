@@ -1,0 +1,173 @@
+"""Pluggable aggregation rules for H-SGD sync events.
+
+The paper's Algorithm 1 aggregates by the plain mean; related work makes the
+*rule* a first-class object (signSGD's majority vote, compressed payloads).
+An ``Aggregator`` factors every rule into two pure leaf-level hooks around
+the one collective a topology knows how to do — a weighted mean:
+
+    payloads = agg.encode(x)          # dict of arrays shaped like x
+    means    = {k: weighted_mean(v) for k, v in payloads.items()}
+    new_x    = agg.decode(means, x)   # back to x.dtype
+
+Both topologies (reshape-mean for the uniform hierarchy, membership-matrix
+segment-mean for arbitrary groupings) drive the SAME hooks, so a rule written
+once works everywhere; ``accum_dtype`` pins the accumulation/payload dtype,
+which is what the collective actually moves on a mesh (bf16 halves the sync
+bytes — measured in §Perf).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Aggregator(abc.ABC):
+    """A sync rule: encode worker payloads, mean them, decode the result.
+
+    accum_dtype is both the payload dtype (collective bytes) and the
+    accumulation dtype of the mean."""
+
+    accum_dtype = jnp.float32
+
+    def encode(self, x: jax.Array) -> Dict[str, jax.Array]:
+        return {"value": x.astype(self.accum_dtype)}
+
+    def decode(self, means: Dict[str, jax.Array], like: jax.Array) -> jax.Array:
+        return means["value"].astype(like.dtype)
+
+    def worker_weights(self, n: int) -> Optional[np.ndarray]:
+        """Optional static per-worker weights, multiplied into the
+        participation mask by the topology."""
+        return None
+
+
+class MeanAggregator(Aggregator):
+    """Exact paper semantics: f32 mean of the participating workers."""
+
+    def __init__(self, dtype: str = "float32"):
+        self.accum_dtype = jnp.dtype(dtype)
+
+    def __repr__(self):
+        return f"MeanAggregator({self.accum_dtype.name})"
+
+
+class CompressedAggregator(MeanAggregator):
+    """Mean with a compressed payload (default bf16): halves the collective
+    bytes of every sync — the beyond-paper §Perf switch, now available to
+    every topology rather than a Uniform-only flag."""
+
+    def __init__(self, dtype: str = "bfloat16"):
+        super().__init__(dtype)
+
+    def __repr__(self):
+        return f"CompressedAggregator({self.accum_dtype.name})"
+
+
+class WeightedAggregator(Aggregator):
+    """Weighted mean with fixed per-worker weights (e.g. dataset-size
+    proportional FedAvg weights, or importance weights under partial
+    participation).  Weights multiply the participation mask, so a masked
+    sync means over ``mask * weights``."""
+
+    def __init__(self, weights, dtype: str = "float32"):
+        self.weights = np.asarray(weights, np.float64)
+        assert self.weights.ndim == 1 and (self.weights >= 0).all()
+        assert self.weights.sum() > 0
+        self.accum_dtype = jnp.dtype(dtype)
+
+    def worker_weights(self, n: int) -> np.ndarray:
+        assert len(self.weights) == n, (len(self.weights), n)
+        return self.weights
+
+    def __repr__(self):
+        return f"WeightedAggregator(n={len(self.weights)})"
+
+
+class SignSGDAggregator(Aggregator):
+    """Majority-vote 1-bit rule (Bernstein et al.) applied to the sync
+    payload: each participant contributes sign(x) plus a scalar-per-entry
+    magnitude |x|; the aggregate is mean|x| * sign(majority).  Lossy by
+    design (changes trajectories); the point is 1-bit payload robustness."""
+
+    def __init__(self, dtype: str = "float32"):
+        self.accum_dtype = jnp.dtype(dtype)
+
+    def encode(self, x: jax.Array) -> Dict[str, jax.Array]:
+        xf = x.astype(self.accum_dtype)
+        return {"sign": jnp.sign(xf), "magnitude": jnp.abs(xf)}
+
+    def decode(self, means: Dict[str, jax.Array], like: jax.Array) -> jax.Array:
+        # sign of the weighted-mean of signs == the participation-weighted
+        # majority vote; exact ties collapse to 0
+        return (means["magnitude"] * jnp.sign(means["sign"])).astype(like.dtype)
+
+    def __repr__(self):
+        return "SignSGDAggregator()"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+AGGREGATORS = {
+    "mean": MeanAggregator,
+    "compressed": CompressedAggregator,
+    "bf16": CompressedAggregator,
+    "weighted": WeightedAggregator,
+    "sign": SignSGDAggregator,
+    "signsgd": SignSGDAggregator,
+}
+
+AggregatorLike = Union[str, Aggregator, None]
+
+
+def make_aggregator(spec: AggregatorLike = None, *,
+                    sync_dtype: Optional[str] = None, **kwargs) -> Aggregator:
+    """Resolve an aggregator from an instance, a registry name, or the legacy
+    ``sync_dtype`` flag (``'bfloat16'`` -> CompressedAggregator)."""
+    if isinstance(spec, Aggregator):
+        assert not kwargs, "kwargs only apply when constructing by name"
+        return spec
+    if spec is None:
+        if sync_dtype is not None and jnp.dtype(sync_dtype) != jnp.float32:
+            return CompressedAggregator(sync_dtype)
+        return MeanAggregator()
+    name = spec.lower()
+    if name not in AGGREGATORS:
+        raise KeyError(f"unknown aggregator {spec!r}; "
+                       f"known: {sorted(AGGREGATORS)}")
+    if sync_dtype is not None:
+        kwargs.setdefault("dtype", sync_dtype)
+    return AGGREGATORS[name](**kwargs)
+
+
+def register_aggregator(name: str, cls) -> None:
+    AGGREGATORS[name.lower()] = cls
+
+
+# ---------------------------------------------------------------------------
+# shared weighted-mean kernels (the logic formerly copy-pasted per topology)
+# ---------------------------------------------------------------------------
+def axis_weighted_mean(v: jax.Array, w: Optional[jax.Array], axes, acc) -> Any:
+    """Mean of ``v`` over ``axes`` (keepdims), optionally weighted by ``w``
+    (broadcastable); accumulation pinned to ``acc`` so a bf16 payload stays
+    bf16 through the collective."""
+    if w is None:
+        return v.astype(acc).mean(axis=axes, keepdims=True, dtype=acc)
+    num = (v.astype(acc) * w).sum(axis=axes, keepdims=True, dtype=acc)
+    den = jnp.maximum(w.sum(axis=axes, keepdims=True, dtype=acc), 1e-9)
+    return num / den
+
+
+def segment_weighted_mean(v: jax.Array, w: jax.Array,
+                          membership: jax.Array, acc) -> jax.Array:
+    """Per-group weighted mean of flat worker values.
+
+    v: (n, dim) payload; w: (n,) weights; membership: (N, n) one-hot.
+    Returns (N, dim) group means."""
+    num = membership @ (w[:, None] * v.astype(acc))
+    den = jnp.maximum(membership @ w, 1e-9)[:, None]
+    return num / den

@@ -57,6 +57,12 @@ class Grouping:
         a = np.asarray(self.assignment)
         return (np.arange(self.N)[:, None] == a[None, :]).astype(np.float64)
 
+    def size_weights(self) -> np.ndarray:
+        """(n,) weights proportional to each worker's group size inverse, so a
+        weighted GLOBAL mean over workers equals the unweighted mean of group
+        means (pairs with ``WeightedAggregator`` for FedAvg-style runs)."""
+        return 1.0 / (self.N * self.sizes[np.asarray(self.assignment)])
+
 
 def contiguous(n: int, N: int) -> Grouping:
     assert n % N == 0

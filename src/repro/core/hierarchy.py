@@ -69,6 +69,17 @@ class HierarchySpec:
     def schedule(self, T: int) -> Tuple[Optional[int], ...]:
         return tuple(self.sync_level(t) for t in range(T))
 
+    def sync_counts(self, T: int) -> Tuple[int, ...]:
+        """Number of level-ℓ events in T steps, ℓ = 1..M (the break
+        semantics make these disjoint: a level-1 step is NOT also counted
+        at level 2) — the input to communication-cost models."""
+        counts = [0] * self.num_levels
+        for t in range(T):
+            lvl = self.sync_level(t)
+            if lvl is not None:
+                counts[lvl - 1] += 1
+        return tuple(counts)
+
 
 def two_level(n: int, N: int, G: int, I: int) -> HierarchySpec:
     assert n % N == 0, (n, N)

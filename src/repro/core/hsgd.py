@@ -6,164 +6,64 @@ execution modes:
 
 * sim  — n = tens..hundreds of CPU "workers"; used for the paper-experiment
   reproduction.  Aggregations are reshapes/means (uniform hierarchy) or
-  mixing-matrix products (arbitrary fixed groupings, Theorem 1).
+  membership segment-means (arbitrary fixed groupings, Theorem 1).
 * mesh — n = product of replica mesh axes; the SAME code, but params are
   sharded ``P(('pod','data'), ...)`` so the level-ℓ mean lowers to an
   all-reduce over exactly the mesh axes of levels >= ℓ (local sync = intra-pod
   ICI; global sync additionally crosses the pod axis).
 
-Because the periods are static, each distinct step kind (pure-local,
-sync@level-ℓ, partial group sync) is its own jitted function — no lax.cond
-around collectives, so the lowered HLO per step kind is exact (the roofline
-reads it).
+Which workers average when — and by what rule — lives entirely in the
+:class:`~repro.core.topology.Topology` / ``Aggregator`` layer; the engine
+only dispatches on typed :class:`~repro.core.topology.SyncEvent`s.  Because
+the periods are static, each distinct event is its own jitted function — no
+lax.cond around collectives, so the lowered HLO per step kind is exact (the
+roofline reads it).  ``run_rounds`` goes further: it compiles the event
+schedule into rounds and fuses each pure-local block into a single jitted
+``lax.scan``, removing the per-step Python dispatch entirely.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.grouping import Grouping
-from repro.core.hierarchy import HierarchySpec
+from repro.core.topology import SyncEvent, Topology
 from repro.optim.optimizers import Optimizer
 
 
-# ---------------------------------------------------------------------------
-# topologies
-# ---------------------------------------------------------------------------
-class UniformTopology:
-    """Uniform multi-level hierarchy (HierarchySpec); reshape-based means.
-    Works identically in sim and mesh mode.
-
-    sync_dtype: dtype of the aggregation payload.  float32 (default) is the
-    exact paper semantics; 'bfloat16' halves the collective bytes of every
-    sync (a beyond-paper §Perf option — the paper calls compression
-    orthogonal, we make it a first-class switch)."""
-
-    def __init__(self, spec: HierarchySpec, sync_dtype: str = "float32"):
-        self.spec = spec
-        self.n = spec.n_workers
-        self.periods = spec.periods
-        self.sync_dtype = sync_dtype
-
-    def step_kind(self, t: int) -> Optional[Tuple[str, int]]:
-        lvl = self.spec.sync_level(t)
-        return None if lvl is None else ("level", lvl)
-
-    def aggregate(self, tree, kind, mask: Optional[jax.Array] = None) -> Any:
-        """mask (n,) float/bool: partial worker participation (paper App. E
-        experiments / stated future work) — the level-ℓ mean runs over the
-        participating workers only; everyone receives the result."""
-        _, lvl = kind
-        gs = self.spec.group_sizes
-        m = len(gs)
-        acc = jnp.dtype(self.sync_dtype)
-
-        def agg(x):
-            shaped = x.reshape(gs + x.shape[1:])
-            axes = tuple(range(lvl - 1, m))
-            if mask is None:
-                # dtype=acc pins the ACCUMULATION dtype: without it jnp.mean
-                # upcasts bf16 sums to f32 and the sync all-reduce payload
-                # stays f32 (measured in §Perf)
-                mean = shaped.astype(acc).mean(axis=axes, keepdims=True,
-                                               dtype=acc).astype(x.dtype)
-            else:
-                w = mask.astype(acc).reshape(gs + (1,) * (shaped.ndim - m))
-                num = (shaped.astype(acc) * w).sum(axis=axes, keepdims=True,
-                                                   dtype=acc)
-                den = jnp.maximum(w.sum(axis=axes, keepdims=True, dtype=acc),
-                                  1e-9)
-                mean = (num / den).astype(x.dtype)
-            return jnp.broadcast_to(mean, shaped.shape).reshape(x.shape)
-
-        return jax.tree.map(agg, tree)
-
-
-class GroupedTopology:
-    """Two-level H-SGD with an explicit (possibly non-uniform) Grouping and
-    per-group local periods I_i (Theorem 1's most general setting)."""
-
-    def __init__(self, grouping: Grouping, G: int,
-                 I: Union[int, Tuple[int, ...]]):
-        self.grouping = grouping
-        self.n = grouping.n
-        self.G = G
-        self.I = tuple([I] * grouping.N) if isinstance(I, int) else tuple(I)
-        assert len(self.I) == grouping.N
-        for Ii in self.I:
-            assert G % Ii == 0, (G, Ii)
-        self.periods = (G, min(self.I))
-        self._A_loc = np.asarray(grouping.local_matrix())
-        self._A_glob = np.asarray(grouping.global_matrix())
-
-    def step_kind(self, t: int):
-        if (t + 1) % self.G == 0:
-            return ("global",)
-        mask = tuple(bool((t + 1) % Ii == 0) for Ii in self.I)
-        return ("groups", mask) if any(mask) else None
-
-    def _matrix(self, kind) -> np.ndarray:
-        if kind[0] == "global":
-            return self._A_glob
-        mask = np.asarray(kind[1])
-        a = np.asarray(self.grouping.assignment)
-        keep = mask[a]                      # workers whose group syncs now
-        A = np.where(keep[:, None], self._A_loc, np.eye(self.n))
-        return A
-
-    def aggregate(self, tree, kind, mask: Optional[jax.Array] = None):
-        if mask is None:
-            A = jnp.asarray(self._matrix(kind), jnp.float32)
-
-            def agg(x):
-                flat = x.reshape(self.n, -1).astype(jnp.float32)
-                out = A @ flat
-                return out.astype(x.dtype).reshape(x.shape)
-
-            return jax.tree.map(agg, tree)
-        # partial participation: group means over participants, distributed
-        # to every member of a syncing group (Algorithm 1 semantics)
-        oh = jnp.asarray(self.grouping.onehot(), jnp.float32)      # (N, n)
-        a = np.asarray(self.grouping.assignment)
-        if kind[0] == "global":
-            syncing = np.ones(self.grouping.N, bool)
-        else:
-            syncing = np.asarray(kind[1])
-        wm = mask.astype(jnp.float32)
-
-        def agg(x):
-            flat = x.reshape(self.n, -1).astype(jnp.float32)
-            num = oh @ (wm[:, None] * flat)                        # (N, dim)
-            den = jnp.maximum(oh @ wm, 1e-9)[:, None]
-            gm = num / den
-            if kind[0] == "global":
-                val = jnp.broadcast_to(gm.mean(0, keepdims=True),
-                                       (self.n, flat.shape[1]))
-            else:
-                val = gm[a]
-            out = jnp.where(jnp.asarray(syncing[a])[:, None], val, flat)
-            return out.astype(x.dtype).reshape(x.shape)
-
-        return jax.tree.map(agg, tree)
-
-
-Topology = Union[UniformTopology, GroupedTopology]
-
-
-# ---------------------------------------------------------------------------
-# engine
-# ---------------------------------------------------------------------------
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class HSGDState:
     params: Any      # leading worker axis n
     opt_state: Any   # leading worker axis n
     step: jax.Array  # scalar int32
+
+
+# ---------------------------------------------------------------------------
+# schedule compilation (for run_rounds)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Round:
+    """``n_local`` local updates, the last one followed by ``event`` (None
+    only for a schedule tail that ends between syncs)."""
+    n_local: int
+    event: Optional[SyncEvent]
+
+
+def compile_schedule(schedule) -> Tuple[Round, ...]:
+    """Fold a per-step event schedule into maximal pure-local rounds."""
+    rounds: List[Round] = []
+    k = 0
+    for ev in schedule:
+        k += 1
+        if ev is not None:
+            rounds.append(Round(k, ev))
+            k = 0
+    if k:
+        rounds.append(Round(k, None))
+    return tuple(rounds)
 
 
 class HSGD:
@@ -184,6 +84,7 @@ class HSGD:
         self._jit = jit
         self.accum_steps = accum_steps
         self._step_fns: Dict[Any, Callable] = {}
+        self._round_fns: Dict[Round, Callable] = {}
 
     # -- init ---------------------------------------------------------------
     def init(self, key, model_init: Callable[[jax.Array], Any]) -> HSGDState:
@@ -197,8 +98,10 @@ class HSGD:
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), opt0)
         return HSGDState(params, opt_state, jnp.zeros((), jnp.int32))
 
-    # -- one combined step per kind ------------------------------------------
-    def _build_step(self, kind, masked: bool = False):
+    # -- building blocks ------------------------------------------------------
+    def _local_update(self):
+        """(params, opt_state, batch) -> (params, opt_state, metrics) for ONE
+        worker; vmapped over the worker axis by the step/round builders."""
         grad_fn = jax.grad(lambda p, b: self.loss_fn(p, b), has_aux=True)
         accum = self.accum_steps
 
@@ -227,6 +130,22 @@ class HSGD:
             params = jax.tree.map(jnp.add, params, updates)
             return params, opt_state, metrics
 
+        return local_update
+
+    def _apply_event(self, params, opt_state, event: SyncEvent, mask=None):
+        params = self.topology.aggregate(params, event, mask=mask)
+        if self.aggregate_opt_state:
+            # average optimizer moments with the same schedule as the
+            # params (paper's SGD has none; momentum/adam extension)
+            agg = self.topology.aggregate(_moments_only(opt_state), event,
+                                          mask=mask)
+            opt_state = _merge_moments(opt_state, agg)
+        return params, opt_state
+
+    # -- one combined step per event ------------------------------------------
+    def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
+        local_update = self._local_update()
+
         def apply_mask(new, old, mask):
             """Non-participating workers keep their previous state."""
             def sel(a, b):
@@ -240,15 +159,10 @@ class HSGD:
             if masked:
                 params = apply_mask(params, state.params, mask)
                 opt_state = apply_mask(opt_state, state.opt_state, mask)
-            if kind is not None:
+            if event is not None:
                 amask = mask if masked else None
-                params = self.topology.aggregate(params, kind, mask=amask)
-                if self.aggregate_opt_state:
-                    # average optimizer moments with the same schedule as the
-                    # params (paper's SGD has none; momentum/adam extension)
-                    agg = self.topology.aggregate(_moments_only(opt_state),
-                                                  kind, mask=amask)
-                    opt_state = _merge_moments(opt_state, agg)
+                params, opt_state = self._apply_event(params, opt_state,
+                                                      event, mask=amask)
             metrics = jax.tree.map(lambda m: m.mean(), metrics)
             return HSGDState(params, opt_state, state.step + 1), metrics
 
@@ -257,20 +171,103 @@ class HSGD:
         return jax.jit(step, donate_argnums=0) if masked else \
             jax.jit(lambda s, b: step(s, b), donate_argnums=0)
 
-    def step_fn(self, kind, masked: bool = False):
-        key = (kind, masked)
+    def step_fn(self, event: Optional[SyncEvent], masked: bool = False):
+        key = (event, masked)
         if key not in self._step_fns:
-            self._step_fns[key] = self._build_step(kind, masked)
+            self._step_fns[key] = self._build_step(event, masked)
         return self._step_fns[key]
 
     def step(self, state: HSGDState, batch,
              mask=None) -> Tuple[HSGDState, Dict]:
         """mask: optional (n,) bool — partial worker participation (held
         fixed by the caller within a round, re-drawn per round)."""
-        kind = self.topology.step_kind(int(state.step))
+        event = self.topology.event_at(int(state.step))
         if mask is None:
-            return self.step_fn(kind)(state, batch)
-        return self.step_fn(kind, masked=True)(state, batch, jnp.asarray(mask))
+            return self.step_fn(event)(state, batch)
+        return self.step_fn(event, masked=True)(state, batch, jnp.asarray(mask))
+
+    # -- schedule-compiled round executor --------------------------------------
+    def _build_round(self, rnd: Round):
+        """One jitted function for '``n_local`` local steps then sync': the
+        local block is a single ``lax.scan`` over the stacked batches, so the
+        whole round is ONE dispatch + ONE jit-cache hit instead of
+        ``n_local`` of each."""
+        local_update = self._local_update()
+        vupdate = jax.vmap(local_update)
+
+        def round_fn(state: HSGDState, batches) -> Tuple[HSGDState, Dict]:
+            """batches: a length-``n_local`` tuple of per-step batches; the
+            stacking happens INSIDE the jitted graph so one round is exactly
+            one dispatch (no host-side jnp.stack per round)."""
+            stacked = batches[0] if rnd.n_local == 1 else \
+                jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+            if rnd.n_local == 1:
+                stacked = jax.tree.map(lambda x: x[None], stacked)
+
+            def body(carry, batch):
+                params, opt_state = carry
+                params, opt_state, metrics = vupdate(params, opt_state, batch)
+                return (params, opt_state), jax.tree.map(
+                    lambda m: m.mean(), metrics)
+
+            (params, opt_state), metrics = jax.lax.scan(
+                body, (state.params, state.opt_state), stacked)
+            if rnd.event is not None:
+                params, opt_state = self._apply_event(params, opt_state,
+                                                      rnd.event)
+            state = HSGDState(params, opt_state, state.step + rnd.n_local)
+            return state, metrics  # metrics stacked (n_local,) per entry
+
+        if not self._jit:
+            return round_fn
+        return jax.jit(round_fn, donate_argnums=0)
+
+    def round_fn(self, rnd: Round):
+        if rnd not in self._round_fns:
+            self._round_fns[rnd] = self._build_round(rnd)
+        return self._round_fns[rnd]
+
+    def run_rounds(self, state: HSGDState, batch_fn: Callable[[int], Any],
+                   T: int, *, eval_every: int = 0,
+                   eval_fn: Optional[Callable[[HSGDState, int], Dict]] = None,
+                   ) -> Tuple[HSGDState, List[Dict]]:
+        """Run T steps through the schedule-compiled executor.
+
+        Precomputes ``topology.schedule(T)``, folds it into rounds
+        (``compile_schedule``) and executes each as one fused call.  The
+        trajectory is identical to T calls of :meth:`step` (tested);
+        distinct ``Round`` signatures are compiled once and reused.
+
+        History records per-step training metrics for EVERY step; when
+        ``eval_every`` is set, ``eval_fn(state, t)`` results are merged into
+        the record at round boundaries where ``(t+1) % eval_every == 0`` (or
+        at t+1 == T) — within a round the intermediate states never
+        materialize, which is where the speed comes from."""
+        t0 = int(state.step)
+        rounds = compile_schedule(self.topology.schedule(t0 + T)[t0:])
+        raw: List[Tuple[int, int, Dict]] = []  # (t_end, n_local, metrics)
+        evals: Dict[int, Dict] = {}
+        t = t0
+        for rnd in rounds:
+            batches = tuple(batch_fn(t + i) for i in range(rnd.n_local))
+            state, metrics = self.round_fn(rnd)(state, batches)
+            t += rnd.n_local
+            raw.append((t, rnd.n_local, metrics))
+            if eval_fn is not None and eval_every and \
+                    (t % eval_every == 0 or t == t0 + T):
+                evals[t] = eval_fn(state, t - 1)
+        # metrics stay on device until here so rounds dispatch back-to-back;
+        # one bulk transfer at the end instead of a sync per step
+        history: List[Dict] = []
+        for t_end, n_local, metrics in raw:
+            metrics = jax.device_get(metrics)
+            for i in range(n_local):
+                step_no = t_end - n_local + i + 1
+                rec = {"t": step_no,
+                       **{k: float(v[i]) for k, v in metrics.items()}}
+                rec.update(evals.get(step_no, {}))
+                history.append(rec)
+        return state, history
 
     # -- inspection ------------------------------------------------------------
     def mean_params(self, state: HSGDState):
@@ -298,12 +295,16 @@ def _merge_moments(opt_state, agg):
 def run(engine: HSGD, state: HSGDState, batch_fn: Callable[[int], Any],
         T: int, eval_every: int = 0,
         eval_fn: Optional[Callable[[HSGDState, int], Dict]] = None):
-    """batch_fn(t) -> batch with leading worker axis. Returns (state, history)."""
+    """batch_fn(t) -> batch with leading worker axis. Returns (state, history).
+
+    History gets one record per step with the training metrics (previously it
+    was silently empty unless ``eval_every`` was set); ``eval_fn`` results are
+    merged into the matching step's record every ``eval_every`` steps."""
     history = []
     for t in range(T):
         state, metrics = engine.step(state, batch_fn(t))
+        rec = {"t": t + 1, **{k: float(v) for k, v in metrics.items()}}
         if eval_every and (t + 1) % eval_every == 0 and eval_fn is not None:
-            rec = {"t": t + 1, **{k: float(v) for k, v in metrics.items()}}
             rec.update(eval_fn(state, t))
-            history.append(rec)
+        history.append(rec)
     return state, history

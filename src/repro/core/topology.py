@@ -1,0 +1,270 @@
+"""The topology layer: WHICH workers average WHEN — as typed sync events.
+
+The paper's multi-level Algorithm D.1 (and the sandwich analysis) treat the
+hierarchy as a *schedule of aggregation events*; this module makes that the
+formal contract.  A ``Topology`` answers three questions:
+
+* ``event_at(t)`` / ``schedule(T)`` — the typed ``SyncEvent`` (if any) fired
+  after the local update of step ``t``;
+* ``aggregate(tree, event)`` — apply the event to a worker-stacked pytree,
+  through a pluggable :class:`~repro.core.aggregators.Aggregator` rule;
+* ``n`` / ``periods`` — the static shape the engine and planners read.
+
+Two adapters implement it: ``UniformTopology`` (HierarchySpec; reshape-based
+means that lower to all-reduces over the matching mesh axes) and
+``GroupedTopology`` (explicit possibly-non-uniform Grouping with per-group
+periods, Theorem 1's most general setting; (N, n) membership segment-means,
+never a dense n x n mixing matrix).  ``make_topology`` is the single
+construction path used by launch/, benchmarks/ and the examples.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregators import (Aggregator, AggregatorLike,
+                                    axis_weighted_mean, make_aggregator,
+                                    segment_weighted_mean)
+from repro.core.grouping import Grouping
+from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """One aggregation event (replaces the ad-hoc ``("level", l)`` /
+    ``("groups", mask)`` step-kind tuples).
+
+    level:  1 = global (paper level 1) ... M = innermost local sync.
+    groups: per-group participation for a partial event (heterogeneous
+            per-group periods I_i); None = every group at this level.
+    weights: optional static per-worker weights for this event (on top of
+            the aggregator's own weights and any runtime mask).
+
+    Frozen + tuple fields => hashable, so events key jit caches directly.
+    """
+    level: int
+    groups: Optional[Tuple[bool, ...]] = None
+    weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        assert self.level >= 1
+        if self.groups is not None:
+            assert any(self.groups), "an event with no syncing group"
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+class Topology(abc.ABC):
+    """Formal contract for 'which workers average when, and how'."""
+
+    n: int                      # number of workers
+    periods: Tuple[int, ...]    # (P_1, ..., P_M), P_1 = G
+    aggregator: Aggregator
+
+    @abc.abstractmethod
+    def event_at(self, t: int) -> Optional[SyncEvent]:
+        """The sync event fired after the update of step ``t`` (0-indexed)."""
+
+    def schedule(self, T: int) -> Tuple[Optional[SyncEvent], ...]:
+        """The full event schedule for T steps (static: periods are fixed)."""
+        return tuple(self.event_at(t) for t in range(T))
+
+    @abc.abstractmethod
+    def aggregate(self, tree, event: SyncEvent, mask=None):
+        """Apply ``event`` to a worker-stacked pytree (leading axis n).
+        mask (n,) float/bool: runtime partial participation — means run over
+        the participating workers only; every member of a syncing group
+        receives the result (Algorithm 1 semantics)."""
+
+    # -- shared helpers -----------------------------------------------------
+    def _event_weights(self, event: SyncEvent, mask) -> Optional[jax.Array]:
+        """Combine runtime mask, aggregator weights and event weights into a
+        single (n,) weight vector (None = plain mean)."""
+        acc = self.aggregator.accum_dtype
+        w = None
+        for part in (mask, self.aggregator.worker_weights(self.n),
+                     None if event.weights is None else np.asarray(event.weights)):
+            if part is None:
+                continue
+            p = jnp.asarray(part).astype(acc)
+            w = p if w is None else w * p
+        return w
+
+
+# ---------------------------------------------------------------------------
+# uniform multi-level hierarchy
+# ---------------------------------------------------------------------------
+class UniformTopology(Topology):
+    """Uniform multi-level hierarchy (HierarchySpec); reshape-based means.
+    Works identically in sim and mesh mode: the level-l mean lowers to an
+    all-reduce over exactly the mesh axes of levels >= l."""
+
+    def __init__(self, spec: HierarchySpec, sync_dtype: Optional[str] = None,
+                 aggregator: AggregatorLike = None):
+        self.spec = spec
+        self.n = spec.n_workers
+        self.periods = spec.periods
+        self.aggregator = make_aggregator(aggregator, sync_dtype=sync_dtype)
+
+    def event_at(self, t: int) -> Optional[SyncEvent]:
+        lvl = self.spec.sync_level(t)
+        return None if lvl is None else SyncEvent(level=lvl)
+
+    def aggregate(self, tree, event: SyncEvent, mask=None):
+        gs = self.spec.group_sizes
+        m = len(gs)
+        assert 1 <= event.level <= m, (event, self.spec)
+        assert event.groups is None, \
+            "uniform hierarchies have no partial-group events; use " \
+            "GroupedTopology or a runtime mask"
+        axes = tuple(range(event.level - 1, m))
+        agg = self.aggregator
+        acc = agg.accum_dtype
+        w = self._event_weights(event, mask)
+
+        def per_leaf(x):
+            shaped = x.reshape(gs + x.shape[1:])
+            wr = None if w is None else \
+                w.reshape(gs + (1,) * (shaped.ndim - m))
+            payloads = agg.encode(shaped)
+            means = {k: axis_weighted_mean(v, wr, axes, acc)
+                     for k, v in payloads.items()}
+            out = agg.decode(means, shaped)
+            return jnp.broadcast_to(out, shaped.shape).reshape(x.shape)
+
+        return jax.tree.map(per_leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# explicit two-level grouping (Theorem 1's most general setting)
+# ---------------------------------------------------------------------------
+class GroupedTopology(Topology):
+    """Two-level H-SGD with an explicit (possibly non-uniform) Grouping and
+    per-group local periods I_i.  Aggregation is an (N, n) membership
+    segment-mean — O(N*n) instead of the old dense n x n mixing product."""
+
+    def __init__(self, grouping: Grouping, G: int,
+                 I: Union[int, Tuple[int, ...]],
+                 sync_dtype: Optional[str] = None,
+                 aggregator: AggregatorLike = None):
+        self.grouping = grouping
+        self.n = grouping.n
+        self.G = G
+        self.I = tuple([I] * grouping.N) if isinstance(I, int) else tuple(I)
+        assert len(self.I) == grouping.N
+        for Ii in self.I:
+            assert G % Ii == 0, (G, Ii)
+        self.periods = (G, min(self.I))
+        self.aggregator = make_aggregator(aggregator, sync_dtype=sync_dtype)
+        self._onehot = np.asarray(grouping.onehot())          # (N, n)
+        self._assignment = np.asarray(grouping.assignment)    # (n,)
+
+    def event_at(self, t: int) -> Optional[SyncEvent]:
+        if (t + 1) % self.G == 0:
+            return SyncEvent(level=1)
+        groups = tuple(bool((t + 1) % Ii == 0) for Ii in self.I)
+        if not any(groups):
+            return None
+        if all(groups):
+            return SyncEvent(level=2)
+        return SyncEvent(level=2, groups=groups)
+
+    def aggregate(self, tree, event: SyncEvent, mask=None):
+        assert event.level in (1, 2), event
+        agg = self.aggregator
+        acc = agg.accum_dtype
+        oh = jnp.asarray(self._onehot, acc)
+        a = self._assignment
+        if event.level == 1 or event.groups is None:
+            syncing = np.ones(self.grouping.N, bool)
+        else:
+            syncing = np.asarray(event.groups)
+        sync_workers = jnp.asarray(syncing[a])                 # (n,) bool
+        w = self._event_weights(event, mask)
+        w = jnp.ones((self.n,), acc) if w is None else w
+
+        def per_leaf(x):
+            flat = x.reshape(self.n, -1)
+            payloads = agg.encode(flat)
+            means = {}
+            for k, v in payloads.items():
+                gm = segment_weighted_mean(v, w, oh, acc)      # (N, dim)
+                if event.level == 1:
+                    # global = unweighted mean of group means (paper A.1)
+                    gm = jnp.broadcast_to(gm.mean(0, keepdims=True, dtype=acc),
+                                          (self.grouping.N, gm.shape[1]))
+                means[k] = gm[a]                               # back to (n, dim)
+            out = agg.decode(means, flat)
+            out = jnp.where(sync_workers[:, None], out, flat)
+            return out.astype(x.dtype).reshape(x.shape)
+
+        return jax.tree.map(per_leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# factory / registry — the single construction path
+# ---------------------------------------------------------------------------
+TOPOLOGIES = {}
+
+
+def register_topology(name: str):
+    def deco(builder):
+        TOPOLOGIES[name.lower()] = builder
+        return builder
+    return deco
+
+
+@register_topology("uniform")
+def _build_uniform(*, spec: Optional[HierarchySpec] = None,
+                   group_sizes=None, periods=None, **kw) -> UniformTopology:
+    if spec is None:
+        assert group_sizes is not None and periods is not None, \
+            "uniform topology needs spec= or group_sizes=/periods="
+        spec = HierarchySpec(tuple(group_sizes), tuple(periods))
+    return UniformTopology(spec, **kw)
+
+
+@register_topology("two_level")
+def _build_two_level(*, n: int, N: int, G: int, I: int, **kw):
+    return UniformTopology(two_level(n, N, G, I), **kw)
+
+
+@register_topology("local_sgd")
+def _build_local_sgd(*, n: int, P: int, **kw):
+    return UniformTopology(local_sgd(n, P), **kw)
+
+
+@register_topology("grouped")
+def _build_grouped(*, grouping: Grouping, G: int, I, **kw):
+    return GroupedTopology(grouping, G, I, **kw)
+
+
+def make_topology(kind: Union[str, HierarchySpec, Grouping], **kwargs) -> Topology:
+    """Build a topology by registry name.
+
+        make_topology("uniform", spec=HierarchySpec((2, 4), (8, 2)))
+        make_topology("two_level", n=8, N=2, G=8, I=2, sync_dtype="bfloat16")
+        make_topology("grouped", grouping=g, G=8, I=(2, 4), aggregator="sign")
+
+    ``aggregator`` accepts an Aggregator instance or a registry name
+    ("mean" | "compressed"/"bf16" | "weighted" | "sign"); the legacy
+    ``sync_dtype`` flag maps to the compressed aggregator.  As a
+    convenience, passing a HierarchySpec or Grouping as ``kind`` routes to
+    the matching builder."""
+    if isinstance(kind, HierarchySpec):
+        return _build_uniform(spec=kind, **kwargs)
+    if isinstance(kind, Grouping):
+        return _build_grouped(grouping=kind, **kwargs)
+    name = kind.lower()
+    if name not in TOPOLOGIES:
+        raise KeyError(f"unknown topology {kind!r}; known: {sorted(TOPOLOGIES)}")
+    return TOPOLOGIES[name](**kwargs)

@@ -20,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
 from repro.configs.base import InputShape, ModelConfig  # noqa: E402
-from repro.core import HSGD, HierarchySpec, UniformTopology  # noqa: E402
+from repro.core import HSGD, HierarchySpec, SyncEvent, make_topology  # noqa: E402
 from repro.models import build_model, decode_state_specs, train_batch_specs  # noqa: E402
 from repro.models.frontends import audio_frame_specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh, n_replicas  # noqa: E402
@@ -129,7 +129,7 @@ def lower_train(cfg: ModelConfig, shape: InputShape, mesh,
             (mesh.shape["pod"], 4, d // 4), (HSGD_G, HSGD_G // 4, HSGD_I))
     spec: HierarchySpec = plan["spec"]
     n = spec.n_workers
-    topo = UniformTopology(spec, sync_dtype=sync_dtype)
+    topo = make_topology("uniform", spec=spec, sync_dtype=sync_dtype)
     eng = HSGD(model.loss, opt, topo, jit=False, accum_steps=accum_steps)
 
     p_spec, o_spec = _state_specs(model, opt, n)
@@ -156,11 +156,11 @@ def lower_train(cfg: ModelConfig, shape: InputShape, mesh,
         batch_sh = jax.tree.map(reshard, batch_sh)
 
     # M=1 hierarchies (fsdp mapping) have no distinct local sync
-    kind_map = {"local": None, "global_sync": ("level", 1)}
+    kind_map = {"local": None, "global_sync": SyncEvent(level=1)}
     if spec.num_levels >= 2:
-        kind_map["local_sync"] = ("level", spec.num_levels)
+        kind_map["local_sync"] = SyncEvent(level=spec.num_levels)
     if spec.num_levels >= 3:
-        kind_map["mid_sync"] = ("level", 2)
+        kind_map["mid_sync"] = SyncEvent(level=2)
     out = {}
     for kname in kinds:
         if kname not in kind_map:

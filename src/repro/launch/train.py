@@ -21,8 +21,8 @@ import numpy as np
 
 from repro.checkpoint import restore, save
 from repro.configs import get_config, reduced
-from repro.core import (HSGD, HierarchySpec, UniformTopology, per_worker_grads,
-                        all_divergences, contiguous)
+from repro.core import (HSGD, HierarchySpec, all_divergences, contiguous,
+                        make_topology, per_worker_grads)
 from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import cosine, momentum, sgd
@@ -45,6 +45,13 @@ def build_argparser():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "momentum"])
+    ap.add_argument("--aggregator", default="mean",
+                    choices=["mean", "compressed", "sign"],
+                    help="aggregation rule applied at every sync event")
+    ap.add_argument("--sync-dtype", default=None,
+                    help="aggregation payload dtype override (bfloat16 "
+                         "halves sync bytes; alone it implies --aggregator "
+                         "compressed)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -75,7 +82,10 @@ def main(argv=None):
 
     lr = cosine(args.lr, args.steps, warmup_steps=min(10, args.steps // 10))
     opt = sgd(lr) if args.optimizer == "sgd" else momentum(lr)
-    eng = HSGD(model.loss, opt, UniformTopology(spec))
+    topo = make_topology(
+        "uniform", spec=spec, sync_dtype=args.sync_dtype,
+        aggregator=None if args.aggregator == "mean" else args.aggregator)
+    eng = HSGD(model.loss, opt, topo)
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
 
     stream = TokenStream(seed=args.seed, batch=args.batch, seq_len=args.seq,

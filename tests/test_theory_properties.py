@@ -8,7 +8,9 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Grouping, contiguous, downward_divergence_avg,
                         global_divergence, group_iid, group_noniid,

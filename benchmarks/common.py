@@ -37,13 +37,14 @@ def make_world(n_workers: int = 8, num_classes: int = 8, dim: int = 24,
 
 def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
                bs: int = 10, eval_every: int = 8,
-               use_rounds: bool = False) -> List[Dict]:
+               use_rounds: bool = False, backend: str = "sim") -> List[Dict]:
     """use_rounds=True runs the schedule-compiled ``run_rounds`` executor
     (same trajectory — tested — fewer dispatches); eval points then land on
-    the round boundaries hit by ``eval_every``."""
+    the round boundaries hit by ``eval_every``.  ``backend`` picks the
+    executor ("sim" | "mesh"); mesh needs one device per worker."""
     if isinstance(topology, HierarchySpec):
         topology = make_topology(topology)
-    eng = HSGD(model.loss, sgd(lr), topology, jit=True)
+    eng = HSGD(model.loss, sgd(lr), topology, jit=True, executor=backend)
     st = eng.init(jax.random.PRNGKey(seed), model.init)
     gb = jax.tree.map(jnp.asarray, ds.global_batch(640))
 
@@ -69,12 +70,13 @@ def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
 
 def steps_per_sec(ds, model, topology, T: int = 256, lr: float = 0.08,
                   bs: int = 10, use_rounds: bool = False,
-                  warmup: int = 32) -> float:
+                  warmup: int = 32, backend: str = "sim") -> float:
     """Wall-clock throughput of the trajectory harness (no evals): the
-    per-step dispatcher vs the schedule-compiled round executor."""
+    per-step dispatcher vs the schedule-compiled round executor, on either
+    execution backend ("sim" | "mesh")."""
     if isinstance(topology, HierarchySpec):
         topology = make_topology(topology)
-    eng = HSGD(model.loss, sgd(lr), topology, jit=True)
+    eng = HSGD(model.loss, sgd(lr), topology, jit=True, executor=backend)
     st = eng.init(jax.random.PRNGKey(0), model.init)
     # warmup must span >= one full global period so EVERY step/round
     # signature compiles before the timed region, and end on a period

@@ -14,6 +14,8 @@ from repro.core.grouping import (Grouping, contiguous, diversity_grouping,
                                  sample_participation)
 from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
 from repro.core.hsgd import (HSGD, HSGDState, Round, compile_schedule, run)
+from repro.core.executors import (Executor, MeshExecutor, SimExecutor,
+                                  make_executor, register_executor)
 from repro.core.planner import (CommModel, PlanPoint, best_under_budget,
                                 enumerate_plans, fastest_under_bound,
                                 pareto_front)
@@ -23,6 +25,8 @@ from repro.core.topology import (GroupedTopology, SyncEvent, Topology,
 
 __all__ = [
     "HSGD", "HSGDState", "Round", "compile_schedule", "run",
+    "Executor", "SimExecutor", "MeshExecutor", "make_executor",
+    "register_executor",
     "Topology", "SyncEvent", "GroupedTopology", "UniformTopology",
     "make_topology", "register_topology",
     "Aggregator", "MeanAggregator", "CompressedAggregator",

@@ -9,11 +9,20 @@ the one collective a topology knows how to do — a weighted mean:
     means    = {k: weighted_mean(v) for k, v in payloads.items()}
     new_x    = agg.decode(means, x)   # back to x.dtype
 
-Both topologies (reshape-mean for the uniform hierarchy, membership-matrix
-segment-mean for arbitrary groupings) drive the SAME hooks, so a rule written
-once works everywhere; ``accum_dtype`` pins the accumulation/payload dtype,
-which is what the collective actually moves on a mesh (bf16 halves the sync
-bytes — measured in §Perf).
+The mean itself comes in two forms, both driving the SAME hooks so a rule
+written once works everywhere:
+
+* segment form — in-array means over a worker axis (reshape-mean for the
+  uniform hierarchy, membership-matrix segment-mean for arbitrary groupings);
+  this is what the sim executor runs on a single device;
+* axis-collective form (:meth:`Aggregator.axis_aggregate`) — ``lax.pmean`` /
+  ``lax.psum`` over *named mesh axes* inside ``shard_map``; this is what the
+  mesh executor lowers each sync event to, so the level-ℓ mean becomes an
+  all-reduce over exactly the mesh axes of levels >= ℓ.
+
+``accum_dtype`` pins the accumulation/payload dtype, which is what the
+collective actually moves on a mesh (bf16 halves the sync bytes — measured
+in §Perf).
 """
 from __future__ import annotations
 
@@ -43,6 +52,53 @@ class Aggregator(abc.ABC):
         """Optional static per-worker weights, multiplied into the
         participation mask by the topology."""
         return None
+
+    def axis_aggregate(self, x: jax.Array, axis_names,
+                       weight: Optional[jax.Array] = None) -> jax.Array:
+        """Axis-collective form: the same encode/mean/decode contract, but
+        the mean is a ``pmean``/``psum`` over the named mesh axes of the
+        syncing levels.  Only callable inside ``shard_map``; ``weight`` is
+        this shard's (scalar) worker weight, or None for a plain mean."""
+        payloads = self.encode(x)
+        means = {k: named_axis_weighted_mean(v, weight, axis_names,
+                                             self.accum_dtype)
+                 for k, v in payloads.items()}
+        return self.decode(means, x)
+
+    def gather_aggregate(self, x: jax.Array, axis_names, group_sizes,
+                         level: int,
+                         weight: Optional[jax.Array] = None) -> jax.Array:
+        """Bitwise-exact axis-collective form: all_gather the FULL worker
+        block (``axis_names`` = one replica axis per level, outermost first)
+        and replay the sim executor's reshape-mean on it — same input shape,
+        same reduce axes, so XLA emits the identical reduction and the
+        result is bit-for-bit the single-device one for the plain-mean
+        rules (mean/compressed/sign — tested; the weighted fused
+        multiply+reduce still reassociates, staying within f32 rounding);
+        each shard then selects its own worker's row.  Moves n_workers x
+        the payload bytes of :meth:`axis_aggregate` — a verification mode,
+        not the production lowering.  ``x`` is a one-worker shard inside
+        ``shard_map``."""
+        m = len(group_sizes)
+        gs = tuple(group_sizes)
+        g = jax.lax.all_gather(x, axis_names, axis=0, tiled=True)  # (n, ...)
+        shaped = g.reshape(gs + g.shape[1:])
+        axes = tuple(range(level - 1, m))
+        wr = None
+        if weight is not None:
+            wg = jax.lax.all_gather(weight.reshape(-1), axis_names,
+                                    axis=0, tiled=True)
+            wr = wg.reshape(gs + (1,) * (shaped.ndim - m)) \
+                .astype(self.accum_dtype)
+        payloads = self.encode(shaped)
+        means = {k: axis_weighted_mean(v, wr, axes, self.accum_dtype)
+                 for k, v in payloads.items()}
+        out = self.decode(means, shaped)
+        out = jnp.broadcast_to(out, shaped.shape).reshape(g.shape)
+        idx = jnp.zeros((), jnp.int32)
+        for a, s in zip(axis_names, gs):
+            idx = idx * s + jax.lax.axis_index(a)
+        return jax.lax.dynamic_index_in_dim(out, idx, axis=0, keepdims=True)
 
 
 class MeanAggregator(Aggregator):
@@ -159,6 +215,21 @@ def axis_weighted_mean(v: jax.Array, w: Optional[jax.Array], axes, acc) -> Any:
         return v.astype(acc).mean(axis=axes, keepdims=True, dtype=acc)
     num = (v.astype(acc) * w).sum(axis=axes, keepdims=True, dtype=acc)
     den = jnp.maximum(w.sum(axis=axes, keepdims=True, dtype=acc), 1e-9)
+    return num / den
+
+
+def named_axis_weighted_mean(v: jax.Array, w: Optional[jax.Array],
+                             axis_names, acc) -> jax.Array:
+    """Named-axis counterpart of :func:`axis_weighted_mean` for shard_map
+    bodies: the level-ℓ mean IS an all-reduce over the mesh axes of levels
+    >= ℓ.  ``w`` is the local shard's scalar worker weight (or None)."""
+    if not axis_names:
+        return v.astype(acc)
+    if w is None:
+        return jax.lax.pmean(v.astype(acc), axis_names)
+    w = jnp.asarray(w, acc).reshape(())
+    num = jax.lax.psum(v.astype(acc) * w, axis_names)
+    den = jnp.maximum(jax.lax.psum(w, axis_names), 1e-9)
     return num / den
 
 

@@ -1,16 +1,22 @@
 """The H-SGD engine (paper Algorithm 1 and multi-level Algorithm D.1).
 
-State layout: every worker owns a full model replica; ``params`` and
-``opt_state`` carry a leading worker axis of size n.  One engine serves both
-execution modes:
+The engine is split into two layers:
 
-* sim  — n = tens..hundreds of CPU "workers"; used for the paper-experiment
-  reproduction.  Aggregations are reshapes/means (uniform hierarchy) or
-  membership segment-means (arbitrary fixed groupings, Theorem 1).
-* mesh — n = product of replica mesh axes; the SAME code, but params are
-  sharded ``P(('pod','data'), ...)`` so the level-ℓ mean lowers to an
-  all-reduce over exactly the mesh axes of levels >= ℓ (local sync = intra-pod
-  ICI; global sync additionally crosses the pod axis).
+* **plan layer** (this module) — everything backend-agnostic: schedule
+  compilation (``compile_schedule`` folds the event schedule into ``Round``s),
+  gradient accumulation, history/eval bookkeeping, and the typed-event
+  dispatch.  ``HSGD`` owns the plan and never touches devices directly.
+* **executor layer** (:mod:`repro.core.executors`) — how a round body runs on
+  hardware.  ``SimExecutor`` (default) vmaps over a leading worker axis on
+  one device and aggregates with in-array segment means; ``MeshExecutor``
+  runs the same round body under ``shard_map`` on a device mesh whose replica
+  axes mirror the hierarchy levels, so each ``SyncEvent(level=ℓ)`` lowers to
+  a ``lax.pmean`` over exactly the mesh axes of levels >= ℓ (local sync =
+  fast intra-pod ICI; global sync additionally crosses the slow pod axis).
+
+State layout: every worker owns a full model replica; ``params`` and
+``opt_state`` carry a leading worker axis of size n (sharded over the replica
+mesh axes under the mesh executor, a plain array dimension under sim).
 
 Which workers average when — and by what rule — lives entirely in the
 :class:`~repro.core.topology.Topology` / ``Aggregator`` layer; the engine
@@ -47,18 +53,25 @@ class HSGDState:
 @dataclasses.dataclass(frozen=True)
 class Round:
     """``n_local`` local updates, the last one followed by ``event`` (None
-    only for a schedule tail that ends between syncs)."""
+    for a round that ends between syncs — a schedule tail, or a cut forced
+    by ``cut_every``)."""
     n_local: int
     event: Optional[SyncEvent]
 
 
-def compile_schedule(schedule) -> Tuple[Round, ...]:
-    """Fold a per-step event schedule into maximal pure-local rounds."""
+def compile_schedule(schedule, cut_every: int = 0,
+                     t0: int = 0) -> Tuple[Round, ...]:
+    """Fold a per-step event schedule into maximal pure-local rounds.
+
+    ``cut_every`` additionally ends a round at every absolute step that is a
+    multiple of it (``t0`` = absolute step of ``schedule[0]``) even without a
+    sync event, so ``run_rounds`` eval points always land on a round boundary
+    regardless of how they align with the sync periods."""
     rounds: List[Round] = []
     k = 0
-    for ev in schedule:
+    for i, ev in enumerate(schedule):
         k += 1
-        if ev is not None:
+        if ev is not None or (cut_every and (t0 + i + 1) % cut_every == 0):
             rounds.append(Round(k, ev))
             k = 0
     if k:
@@ -67,12 +80,17 @@ def compile_schedule(schedule) -> Tuple[Round, ...]:
 
 
 class HSGD:
-    """loss_fn(params, batch) -> (loss, metrics-dict). Batch passed to
-    ``step`` must carry a leading worker axis of size n."""
+    """The plan layer.  loss_fn(params, batch) -> (loss, metrics-dict).
+    Batch passed to ``step`` must carry a leading worker axis of size n.
+
+    ``executor`` picks the execution backend: ``"sim"`` (default; vmap on one
+    device), ``"mesh"`` (shard_map over a hierarchy-shaped device mesh), an
+    :class:`~repro.core.executors.Executor` instance, or a registered name.
+    """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
                  topology: Topology, *, aggregate_opt_state: bool = True,
-                 jit: bool = True, accum_steps: int = 1):
+                 jit: bool = True, accum_steps: int = 1, executor=None):
         """accum_steps > 1: each H-SGD iteration accumulates gradients over
         that many microbatches (scan) before the single optimizer update —
         same semantics as one large-batch step (SGD is linear in the
@@ -83,8 +101,10 @@ class HSGD:
         self.aggregate_opt_state = aggregate_opt_state
         self._jit = jit
         self.accum_steps = accum_steps
-        self._step_fns: Dict[Any, Callable] = {}
-        self._round_fns: Dict[Round, Callable] = {}
+        # local import: executors imports this module for HSGDState/Round
+        from repro.core.executors import make_executor
+        self.executor = make_executor(executor)
+        self.executor.bind(self)
 
     # -- init ---------------------------------------------------------------
     def init(self, key, model_init: Callable[[jax.Array], Any]) -> HSGDState:
@@ -96,12 +116,15 @@ class HSGD:
         opt0 = self.optimizer.init(params0)
         opt_state = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), opt0)
-        return HSGDState(params, opt_state, jnp.zeros((), jnp.int32))
+        state = HSGDState(params, opt_state, jnp.zeros((), jnp.int32))
+        return self.executor.place(state)
 
     # -- building blocks ------------------------------------------------------
-    def _local_update(self):
+    def local_update_fn(self):
         """(params, opt_state, batch) -> (params, opt_state, metrics) for ONE
-        worker; vmapped over the worker axis by the step/round builders."""
+        worker — the pure per-worker half of the plan (with gradient
+        accumulation folded in); executors map it over the worker axis
+        (vmap under sim, one worker per mesh replica under mesh)."""
         grad_fn = jax.grad(lambda p, b: self.loss_fn(p, b), has_aux=True)
         accum = self.accum_steps
 
@@ -132,101 +155,26 @@ class HSGD:
 
         return local_update
 
-    def _apply_event(self, params, opt_state, event: SyncEvent, mask=None):
-        params = self.topology.aggregate(params, event, mask=mask)
-        if self.aggregate_opt_state:
-            # average optimizer moments with the same schedule as the
-            # params (paper's SGD has none; momentum/adam extension)
-            agg = self.topology.aggregate(_moments_only(opt_state), event,
-                                          mask=mask)
-            opt_state = _merge_moments(opt_state, agg)
-        return params, opt_state
-
-    # -- one combined step per event ------------------------------------------
-    def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
-        local_update = self._local_update()
-
-        def apply_mask(new, old, mask):
-            """Non-participating workers keep their previous state."""
-            def sel(a, b):
-                m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
-                return jnp.where(m, a, b)
-            return jax.tree.map(sel, new, old)
-
-        def step(state: HSGDState, batch, mask=None) -> Tuple[HSGDState, Dict]:
-            params, opt_state, metrics = jax.vmap(local_update)(
-                state.params, state.opt_state, batch)
-            if masked:
-                params = apply_mask(params, state.params, mask)
-                opt_state = apply_mask(opt_state, state.opt_state, mask)
-            if event is not None:
-                amask = mask if masked else None
-                params, opt_state = self._apply_event(params, opt_state,
-                                                      event, mask=amask)
-            metrics = jax.tree.map(lambda m: m.mean(), metrics)
-            return HSGDState(params, opt_state, state.step + 1), metrics
-
-        if not self._jit:
-            return step
-        return jax.jit(step, donate_argnums=0) if masked else \
-            jax.jit(lambda s, b: step(s, b), donate_argnums=0)
-
+    # -- executor delegation ---------------------------------------------------
     def step_fn(self, event: Optional[SyncEvent], masked: bool = False):
-        key = (event, masked)
-        if key not in self._step_fns:
-            self._step_fns[key] = self._build_step(event, masked)
-        return self._step_fns[key]
+        """The executor's compiled function for one '``event`` step'."""
+        return self.executor.step_fn(event, masked)
+
+    def round_fn(self, rnd: Round):
+        """The executor's compiled function for one round."""
+        return self.executor.round_fn(rnd)
 
     def step(self, state: HSGDState, batch,
              mask=None) -> Tuple[HSGDState, Dict]:
         """mask: optional (n,) bool — partial worker participation (held
-        fixed by the caller within a round, re-drawn per round)."""
+        fixed by the caller within a round, re-drawn per round).  NOTE: pays
+        a host sync per call (``int(state.step)``); prefer run_rounds."""
         event = self.topology.event_at(int(state.step))
         if mask is None:
             return self.step_fn(event)(state, batch)
         return self.step_fn(event, masked=True)(state, batch, jnp.asarray(mask))
 
     # -- schedule-compiled round executor --------------------------------------
-    def _build_round(self, rnd: Round):
-        """One jitted function for '``n_local`` local steps then sync': the
-        local block is a single ``lax.scan`` over the stacked batches, so the
-        whole round is ONE dispatch + ONE jit-cache hit instead of
-        ``n_local`` of each."""
-        local_update = self._local_update()
-        vupdate = jax.vmap(local_update)
-
-        def round_fn(state: HSGDState, batches) -> Tuple[HSGDState, Dict]:
-            """batches: a length-``n_local`` tuple of per-step batches; the
-            stacking happens INSIDE the jitted graph so one round is exactly
-            one dispatch (no host-side jnp.stack per round)."""
-            stacked = batches[0] if rnd.n_local == 1 else \
-                jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
-            if rnd.n_local == 1:
-                stacked = jax.tree.map(lambda x: x[None], stacked)
-
-            def body(carry, batch):
-                params, opt_state = carry
-                params, opt_state, metrics = vupdate(params, opt_state, batch)
-                return (params, opt_state), jax.tree.map(
-                    lambda m: m.mean(), metrics)
-
-            (params, opt_state), metrics = jax.lax.scan(
-                body, (state.params, state.opt_state), stacked)
-            if rnd.event is not None:
-                params, opt_state = self._apply_event(params, opt_state,
-                                                      rnd.event)
-            state = HSGDState(params, opt_state, state.step + rnd.n_local)
-            return state, metrics  # metrics stacked (n_local,) per entry
-
-        if not self._jit:
-            return round_fn
-        return jax.jit(round_fn, donate_argnums=0)
-
-    def round_fn(self, rnd: Round):
-        if rnd not in self._round_fns:
-            self._round_fns[rnd] = self._build_round(rnd)
-        return self._round_fns[rnd]
-
     def run_rounds(self, state: HSGDState, batch_fn: Callable[[int], Any],
                    T: int, *, eval_every: int = 0,
                    eval_fn: Optional[Callable[[HSGDState, int], Dict]] = None,
@@ -234,17 +182,21 @@ class HSGD:
         """Run T steps through the schedule-compiled executor.
 
         Precomputes ``topology.schedule(T)``, folds it into rounds
-        (``compile_schedule``) and executes each as one fused call.  The
-        trajectory is identical to T calls of :meth:`step` (tested);
-        distinct ``Round`` signatures are compiled once and reused.
+        (``compile_schedule``) and executes each as one fused call on the
+        bound executor.  The trajectory is identical to T calls of
+        :meth:`step` (tested); distinct ``Round`` signatures are compiled
+        once and reused.
 
         History records per-step training metrics for EVERY step; when
-        ``eval_every`` is set, ``eval_fn(state, t)`` results are merged into
-        the record at round boundaries where ``(t+1) % eval_every == 0`` (or
-        at t+1 == T) — within a round the intermediate states never
-        materialize, which is where the speed comes from."""
+        ``eval_every`` is set, the schedule is additionally cut at every
+        ``eval_every``-th step so ``eval_fn(state, t)`` fires exactly there
+        (plus at t+1 == T), and its results are merged into the matching
+        record — within a round the intermediate states never materialize,
+        which is where the speed comes from."""
         t0 = int(state.step)
-        rounds = compile_schedule(self.topology.schedule(t0 + T)[t0:])
+        cut = eval_every if (eval_fn is not None and eval_every) else 0
+        rounds = compile_schedule(self.topology.schedule(t0 + T)[t0:],
+                                  cut_every=cut, t0=t0)
         raw: List[Tuple[int, int, Dict]] = []  # (t_end, n_local, metrics)
         evals: Dict[int, Dict] = {}
         t = t0

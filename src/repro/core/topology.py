@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Optional, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ import numpy as np
 from repro.core.aggregators import (Aggregator, AggregatorLike,
                                     axis_weighted_mean, make_aggregator,
                                     segment_weighted_mean)
-from repro.core.grouping import Grouping
+from repro.core.grouping import Grouping, contiguous
 from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
 
 
@@ -85,6 +85,26 @@ class Topology(abc.ABC):
         the participating workers only; every member of a syncing group
         receives the result (Algorithm 1 semantics)."""
 
+    # -- mesh lowering ------------------------------------------------------
+    def level_axes(self, event: SyncEvent,
+                   axis_names: Tuple[str, ...]) -> Tuple[str, ...]:
+        """The named mesh axes whose all-reduce realizes ``event``.
+
+        ``axis_names`` is one replica mesh axis per hierarchy level, outermost
+        (level 1) first; a level-ℓ event lowers to a collective over the axes
+        of levels >= ℓ.  Topologies with no uniform level structure cannot map
+        onto mesh axes and raise."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not map onto named mesh axes; "
+            "the mesh backend needs a uniform hierarchy (UniformTopology)")
+
+    # -- telemetry ----------------------------------------------------------
+    def level_groupings(self) -> Dict[int, Grouping]:
+        """Worker partition into the level-ℓ subtrees, for every internal
+        level ℓ (the per-level divergence telemetry surface).  May be empty
+        (single-level schedules have no internal grouping)."""
+        return {}
+
     # -- shared helpers -----------------------------------------------------
     def _event_weights(self, event: SyncEvent, mask) -> Optional[jax.Array]:
         """Combine runtime mask, aggregator weights and event weights into a
@@ -118,6 +138,21 @@ class UniformTopology(Topology):
     def event_at(self, t: int) -> Optional[SyncEvent]:
         lvl = self.spec.sync_level(t)
         return None if lvl is None else SyncEvent(level=lvl)
+
+    def level_axes(self, event: SyncEvent,
+                   axis_names: Tuple[str, ...]) -> Tuple[str, ...]:
+        m = self.spec.num_levels
+        assert len(axis_names) == m, \
+            f"need one replica mesh axis per level, got {axis_names} " \
+            f"for {m}-level {self.spec}"
+        assert 1 <= event.level <= m, (event, self.spec)
+        assert event.groups is None, \
+            "partial-group events have no named-axis lowering"
+        return tuple(axis_names[event.level - 1:])
+
+    def level_groupings(self) -> Dict[int, Grouping]:
+        return {l: contiguous(self.n, self.spec.n_at_level(l))
+                for l in range(1, self.spec.num_levels)}
 
     def aggregate(self, tree, event: SyncEvent, mask=None):
         gs = self.spec.group_sizes
@@ -177,6 +212,9 @@ class GroupedTopology(Topology):
         if all(groups):
             return SyncEvent(level=2)
         return SyncEvent(level=2, groups=groups)
+
+    def level_groupings(self) -> Dict[int, Grouping]:
+        return {1: self.grouping}
 
     def aggregate(self, tree, event: SyncEvent, mask=None):
         assert event.level in (1, 2), event

@@ -165,7 +165,7 @@ def lower_train(cfg: ModelConfig, shape: InputShape, mesh,
     for kname in kinds:
         if kname not in kind_map:
             continue
-        step = eng._build_step(kind_map[kname])
+        step = eng.step_fn(kind_map[kname])
         metrics_sh = None  # let GSPMD place scalars
         fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, metrics_sh))

@@ -5,12 +5,30 @@ Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16) — the 'pod' axis
 carries H-SGD's global aggregation (slow DCI), 'data' the local aggregations
 (fast ICI), 'model' tensor parallelism inside a worker.
 
+``make_hsgd_mesh`` generalizes this to any uniform hierarchy: one replica
+mesh axis per level (outermost = level 1, the slow/global fabric), so the
+mesh executor's level-ℓ sync is an all-reduce over exactly the axes of
+levels >= ℓ.
+
 Functions, not module constants: importing this module never touches jax
 device state.
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
+
+# Replica-axis naming per hierarchy depth; level 1 (global, slow fabric)
+# first.  Deeper-than-3 hierarchies fall back to generic lvl<ℓ> names.
+_LEVEL_AXIS_NAMES = {1: ("data",), 2: ("pod", "data"),
+                     3: ("pod", "rack", "data")}
+
+
+def level_axis_names(num_levels: int) -> Tuple[str, ...]:
+    """Replica mesh axis names for a ``num_levels``-deep hierarchy."""
+    return _LEVEL_AXIS_NAMES.get(
+        num_levels, tuple(f"lvl{l}" for l in range(1, num_levels + 1)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,8 +37,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(n_data: int = 1, n_model: int = 1):
-    """Tiny mesh over host devices for CPU integration tests."""
+def make_hsgd_mesh(group_sizes: Tuple[int, ...], n_model: int = 1,
+                   axis_names: Optional[Tuple[str, ...]] = None):
+    """Mesh whose replica axes mirror a uniform hierarchy: axis ℓ has size
+    N_ℓ (``group_sizes``, outermost first), plus a trailing 'model' axis for
+    within-worker tensor parallelism.  Needs prod(group_sizes) * n_model
+    devices."""
+    names = tuple(axis_names) if axis_names else level_axis_names(
+        len(group_sizes))
+    assert len(names) == len(group_sizes), (names, group_sizes)
+    return jax.make_mesh(tuple(group_sizes) + (n_model,), names + ("model",))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1, *,
+                   group_sizes: Optional[Tuple[int, ...]] = None):
+    """Tiny mesh over host devices for CPU integration tests.  With
+    ``group_sizes``, builds the hierarchy-shaped mesh of ``make_hsgd_mesh``
+    (one replica axis per level) instead of the flat ('data','model') one."""
+    if group_sizes is not None:
+        return make_hsgd_mesh(tuple(group_sizes), n_model=n_model)
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 

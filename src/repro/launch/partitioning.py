@@ -147,5 +147,34 @@ def cache_shardings(mesh, cache_specs: Any, global_batch: int):
     return jax.tree.map_with_path(one, cache_specs)
 
 
+def worker_axis_spec(rep_axes: Tuple[str, ...], ndim: int,
+                     lead_axis: int = 0) -> P:
+    """The one definition of 'the worker axis spans the replica mesh axes':
+    dim ``lead_axis`` over ``rep_axes``, every other dim replicated.  Used
+    for both device placement (:func:`hsgd_state_shardings`) and the mesh
+    executor's shard_map in/out specs, so the two cannot drift."""
+    entries = [None] * ndim
+    entries[lead_axis] = tuple(rep_axes)
+    return P(*entries)
+
+
+def hsgd_state_shardings(mesh, state: Any):
+    """Shardings for H-SGD training state under the mesh executor: every
+    array leaf's leading worker axis spans the replica axes (one worker per
+    replica-mesh coordinate), remaining dims replicated — within-worker
+    'model' TP composes on top via :func:`params_shardings` once the loss is
+    written with named-axis collectives.  Scalars (state.step) replicate."""
+    from repro.launch.mesh import replica_axes
+    rep = replica_axes(mesh)
+
+    def one(leaf):
+        nd = len(np.shape(leaf))
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, worker_axis_spec(rep, nd))
+
+    return jax.tree.map(one, state)
+
+
 def replicated(mesh, specs: Any):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), specs)

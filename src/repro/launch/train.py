@@ -5,6 +5,14 @@ Runs on whatever devices exist (CPU smoke -> TPU pods): builds the model from
 optionally --levels for multi-level), the synthetic token pipeline, and trains
 with periodic checkpointing + divergence telemetry.
 
+Execution goes through the schedule-compiled round executor (``run_rounds``):
+each pure-local block is one fused dispatch, with the schedule additionally
+cut at the telemetry cadence so checkpoints/divergences land exactly on their
+steps.  ``--backend`` picks the executor: ``sim`` (default; vmap over the
+worker axis on one device) or ``mesh`` (shard_map over a hierarchy-shaped
+device mesh — needs prod(level sizes) devices; sync events lower to
+named-axis all-reduces).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --workers 8 --groups 2 --G 8 --I 2 --steps 60 --batch 4 --seq 64
@@ -13,16 +21,16 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import restore, save
 from repro.configs import get_config, reduced
 from repro.core import (HSGD, HierarchySpec, all_divergences, contiguous,
-                        make_topology, per_worker_grads)
+                        make_executor, make_topology, per_worker_grads)
 from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import cosine, momentum, sgd
@@ -40,6 +48,10 @@ def build_argparser():
     ap.add_argument("--levels", type=str, default="",
                     help="multi-level spec 'N1,N2,..:P1,P2,..' (overrides "
                          "--workers/--groups/--G/--I)")
+    ap.add_argument("--backend", default="sim", choices=["sim", "mesh"],
+                    help="executor: 'sim' (single-device vmap) or 'mesh' "
+                         "(shard_map; one device per worker, sync events "
+                         "lower to named-axis all-reduces)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=4, help="per-worker batch")
     ap.add_argument("--seq", type=int, default=64)
@@ -85,7 +97,7 @@ def main(argv=None):
     topo = make_topology(
         "uniform", spec=spec, sync_dtype=args.sync_dtype,
         aggregator=None if args.aggregator == "mean" else args.aggregator)
-    eng = HSGD(model.loss, opt, topo)
+    eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend))
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
 
     stream = TokenStream(seed=args.seed, batch=args.batch, seq_len=args.seq,
@@ -96,32 +108,65 @@ def main(argv=None):
         try:
             start, tree = restore(args.ckpt_dir, {
                 "params": state.params, "opt": state.opt_state})
-            state = state.__class__(tree["params"], tree["opt"],
-                                    jnp.asarray(start, jnp.int32))
+            state = eng.executor.place(state.__class__(
+                tree["params"], tree["opt"], jnp.asarray(start, jnp.int32)))
             print(f"resumed from step {start}")
         except AssertionError:
             pass
 
-    history = []
+    # telemetry cadence: the round schedule is cut at the gcd of the
+    # intervals that need exact-step STATE (checkpoints, divergences), so
+    # those land on round boundaries.  Logging reads the per-step history
+    # and needs no cut — including it here would degenerate coprime
+    # cadences to gcd 1, i.e. per-step dispatch.
+    ckpt_every = args.ckpt_every if args.ckpt_dir else 0
+    intervals = [v for v in (args.divergence_every, ckpt_every) if v]
+    eval_every = math.gcd(*intervals) if intervals else 0
+    # per-level divergence groupings come from the topology (a >2-level
+    # schedule reports every internal level, not just level 1)
+    groupings = topo.level_groupings() or {1: contiguous(n, 1)}
     t0 = time.time()
-    for t in range(start, args.steps):
-        batch = stream(t)
-        state, metrics = eng.step(state, batch)
-        if (t + 1) % args.log_every == 0 or t + 1 == args.steps:
-            rec = {"step": t + 1,
-                   "loss": float(metrics["ce"]),
-                   "lvl": spec.sync_level(t),
-                   "elapsed_s": round(time.time() - t0, 2)}
-            if args.divergence_every and (t + 1) % args.divergence_every == 0:
-                g = per_worker_grads(model.loss, eng.mean_params(state),
-                                     stream(10_000_000 + t))
-                rec["divergence"] = all_divergences(
-                    g, contiguous(n, spec.group_sizes[0]))
+
+    def telemetry(st, t):
+        step = t + 1
+        rec = {"elapsed_s": round(time.time() - t0, 2)}
+        if args.divergence_every and step % args.divergence_every == 0:
+            g = per_worker_grads(model.loss, eng.mean_params(st),
+                                 stream(10_000_000 + t))
+            rec["divergence"] = {f"L{lvl}": all_divergences(g, gr)
+                                 for lvl, gr in groupings.items()}
+        if ckpt_every and step % ckpt_every == 0:
+            save(args.ckpt_dir, step,
+                 {"params": st.params, "opt": st.opt_state})
+        return rec
+
+    state, step_hist = eng.run_rounds(
+        state, stream, args.steps - start,
+        eval_every=eval_every, eval_fn=telemetry)
+
+    # un-hooked steps get the elapsed_s of the NEXT measured boundary (the
+    # telemetry point whose rounds covered them): an upper bound, and
+    # monotonic — a plain end-of-run fallback would make earlier records
+    # report larger elapsed than later ones
+    nxt = round(time.time() - t0, 2)
+    for srec in reversed(step_hist):
+        nxt = srec.setdefault("elapsed_s", nxt)
+    history = []
+    for srec in step_hist:
+        step = srec["t"]
+        # record log-cadence steps, the final step, and every step that
+        # carries divergence telemetry (its cadence may not align with
+        # --log-every)
+        if step % args.log_every == 0 or step == args.steps \
+                or "divergence" in srec:
+            rec = {"step": step,
+                   "loss": srec["ce"],
+                   "lvl": spec.sync_level(step - 1),
+                   "elapsed_s": srec["elapsed_s"]}
+            if "divergence" in srec:
+                rec["divergence"] = srec["divergence"]
             history.append(rec)
             print(json.dumps(rec))
-        if args.ckpt_dir and args.ckpt_every and (t + 1) % args.ckpt_every == 0:
-            save(args.ckpt_dir, t + 1,
-                 {"params": state.params, "opt": state.opt_state})
     if args.out:
         with open(args.out, "w") as f:
             json.dump(history, f, indent=1)

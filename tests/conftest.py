@@ -1,6 +1,8 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
-tests and benches must see the real single CPU device; only the dry-run
-subprocess (tests/test_dryrun_small.py) forces placeholder devices."""
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override HERE — it must
+be set before jax initializes, so ci.yml exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` process-wide (the
+in-process mesh-executor tests skip without it) and the subprocess tests
+(test_dryrun_small.py, test_executors.py) force it themselves."""
 import jax
 import pytest
 

@@ -52,7 +52,7 @@ batch_sh = batch_shardings(mesh, batch_spec, lead_worker=("pod", "data"))
 out = {}
 for kname, kind in [("local", None), ("local_sync", SyncEvent(level=2)),
                     ("global_sync", SyncEvent(level=1))]:
-    step = eng._build_step(kind)
+    step = eng.step_fn(kind)
     fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
                  out_shardings=(state_sh, None))
     compiled = fn.lower(state_spec, batch_spec).compile()
@@ -68,13 +68,13 @@ state = eng.init(jax.random.PRNGKey(0), model.init)
 batch = jax.tree.map(
     lambda s: jax.random.randint(jax.random.PRNGKey(1), s.shape, 0,
                                  cfg.vocab_size), batch_spec)
-step = eng._build_step(SyncEvent(level=1))
+step = eng.step_fn(SyncEvent(level=1))
 fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
              out_shardings=(state_sh, None))
 state_sharded = jax.device_put(state, state_sh)
 batch_sharded = jax.device_put(batch, batch_sh)
 new_sharded, m1 = fn(state_sharded, batch_sharded)
-new_local, m2 = eng._build_step(SyncEvent(level=1))(state, batch)
+new_local, m2 = eng.step_fn(SyncEvent(level=1))(state, batch)
 diff = max(jax.tree.leaves(jax.tree.map(
     lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32) -
                                jnp.asarray(b, jnp.float32)).max()),

@@ -1,0 +1,261 @@
+"""Plan/executor split: the SimExecutor extraction, the MeshExecutor's
+named-axis lowering, and sim<->mesh trajectory equivalence.
+
+The in-process mesh tests need >= 8 devices; ci.yml provides them via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+initializes).  Without them they skip, and the subprocess test at the bottom
+still covers the equivalence suite on a plain single-device run."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HSGD, Executor, GroupedTopology, HierarchySpec,
+                        MeshExecutor, SimExecutor, SyncEvent,
+                        WeightedAggregator, contiguous, make_executor,
+                        make_topology)
+from repro.data import FederatedDataset, label_shard_partition, make_classification
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import sgd
+
+N = 8
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < N,
+    reason="needs 8 devices: export XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax init")
+
+SPECS = {
+    "two_level": (HierarchySpec((2, 4), (8, 4)), (2, 4)),
+    "three_level": (HierarchySpec((2, 2, 2), (8, 4, 2)), (2, 2, 2)),
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_classification(0, num_classes=8, dim=16, per_class=40)
+    parts = label_shard_partition(y, [[j] for j in range(8)])
+    ds = FederatedDataset(x, y, parts)
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=24,
+                                     num_classes=8))
+    return ds, model
+
+
+def max_param_diff(a, b):
+    d = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)
+    return max(jax.tree.leaves(d))
+
+
+def trajectory(ds, model, topo, executor, T=12):
+    eng = HSGD(model.loss, sgd(0.05), topo, executor=executor)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, hist = eng.run_rounds(
+        st, lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8)), T)
+    return st, hist
+
+
+# ---------------------------------------------------------------------------
+# registry / validation (device-count independent)
+# ---------------------------------------------------------------------------
+def test_make_executor_registry():
+    assert isinstance(make_executor(None), SimExecutor)
+    assert isinstance(make_executor("sim"), SimExecutor)
+    assert isinstance(make_executor("mesh"), MeshExecutor)
+    inst = SimExecutor()
+    assert make_executor(inst) is inst
+    with pytest.raises(KeyError):
+        make_executor("tpu_pod")
+
+
+def test_hsgd_accepts_executor_spellings(setup):
+    ds, model = setup
+    topo = make_topology("two_level", n=N, N=2, G=8, I=4)
+    eng = HSGD(model.loss, sgd(0.05), topo, executor="sim")
+    assert isinstance(eng.executor, SimExecutor)
+    assert eng.executor.plan is eng
+
+
+def test_mesh_rejects_grouped_topology(setup):
+    ds, model = setup
+    topo = GroupedTopology(contiguous(N, 2), G=8, I=4)
+    with pytest.raises(TypeError, match="uniform hierarchy"):
+        HSGD(model.loss, sgd(0.05), topo, executor="mesh")
+
+
+def test_level_axes_mapping():
+    topo = make_topology("uniform", spec=HierarchySpec((2, 2, 2), (8, 4, 2)))
+    axes = ("pod", "rack", "data")
+    assert topo.level_axes(SyncEvent(level=1), axes) == ("pod", "rack", "data")
+    assert topo.level_axes(SyncEvent(level=2), axes) == ("rack", "data")
+    assert topo.level_axes(SyncEvent(level=3), axes) == ("data",)
+    with pytest.raises(AssertionError):
+        topo.level_axes(SyncEvent(level=1), ("pod", "data"))  # wrong depth
+    grouped = GroupedTopology(contiguous(N, 2), G=8, I=4)
+    with pytest.raises(NotImplementedError):
+        grouped.level_axes(SyncEvent(level=1), ("data",))
+
+
+def test_level_groupings_derivation():
+    topo = make_topology("uniform", spec=HierarchySpec((2, 2, 2), (8, 4, 2)))
+    gs = topo.level_groupings()
+    assert sorted(gs) == [1, 2]
+    assert gs[1].assignment == contiguous(8, 2).assignment
+    assert gs[2].assignment == contiguous(8, 4).assignment
+    g = contiguous(N, 2)
+    assert GroupedTopology(g, G=8, I=4).level_groupings() == {1: g}
+    assert make_topology("local_sgd", n=N, P=4).level_groupings() == {}
+
+
+# ---------------------------------------------------------------------------
+# sim <-> mesh trajectory equivalence (8 host devices)
+# ---------------------------------------------------------------------------
+@needs_devices
+@pytest.mark.parametrize("agg", [None, "compressed", "sign"],
+                         ids=["mean", "compressed", "sign"])
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+def test_mesh_pmean_matches_sim(setup, spec_name, agg):
+    """The production lowering (pmean over the level axes) must reproduce
+    the sim trajectory to f32 rounding."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS[spec_name]
+    mk = lambda: make_topology("uniform", spec=spec, aggregator=agg)
+    st_sim, h_sim = trajectory(ds, model, mk(), "sim")
+    st_mesh, h_mesh = trajectory(
+        ds, model, mk(), MeshExecutor(make_host_mesh(group_sizes=gs)))
+    assert max_param_diff(st_sim.params, st_mesh.params) < 5e-6
+    assert [r["t"] for r in h_mesh] == [r["t"] for r in h_sim]
+    for a, b in zip(h_sim, h_mesh):
+        assert abs(a["ce"] - b["ce"]) < 1e-5
+
+
+@needs_devices
+@pytest.mark.parametrize("agg", [None, "compressed", "sign"],
+                         ids=["mean", "compressed", "sign"])
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+def test_mesh_exact_is_bitwise(setup, spec_name, agg):
+    """exact=True replays the sim reshape-mean per shard: trajectories are
+    bit-identical for the plain-mean rules."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS[spec_name]
+    mk = lambda: make_topology("uniform", spec=spec, aggregator=agg)
+    st_sim, _ = trajectory(ds, model, mk(), "sim")
+    st_mesh, _ = trajectory(
+        ds, model, mk(),
+        MeshExecutor(make_host_mesh(group_sizes=gs), exact=True))
+    assert max_param_diff(st_sim.params, st_mesh.params) == 0.0
+
+
+@needs_devices
+def test_mesh_weighted_aggregator(setup):
+    """Static per-worker weights ride the named-axis lowering (psum of
+    weighted payloads / psum of weights) to f32 rounding."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    w = np.arange(1, N + 1, dtype=float)
+    mk = lambda: make_topology("uniform", spec=spec,
+                               aggregator=WeightedAggregator(w))
+    st_sim, _ = trajectory(ds, model, mk(), "sim")
+    st_mesh, _ = trajectory(
+        ds, model, mk(), MeshExecutor(make_host_mesh(group_sizes=gs)))
+    assert max_param_diff(st_sim.params, st_mesh.params) < 5e-6
+
+
+@needs_devices
+def test_mesh_step_matches_rounds(setup):
+    """Per-step dispatch and the round executor agree bitwise on mesh too."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    batch_fn = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    mk = lambda: make_topology("uniform", spec=spec)
+    ex = lambda: MeshExecutor(make_host_mesh(group_sizes=gs))
+    e1 = HSGD(model.loss, sgd(0.05), mk(), executor=ex())
+    s1 = e1.init(jax.random.PRNGKey(0), model.init)
+    for t in range(10):
+        s1, _ = e1.step(s1, batch_fn(t))
+    e2 = HSGD(model.loss, sgd(0.05), mk(), executor=ex())
+    s2 = e2.init(jax.random.PRNGKey(0), model.init)
+    s2, _ = e2.run_rounds(s2, batch_fn, 10)
+    assert max_param_diff(s1.params, s2.params) == 0.0
+    assert int(s2.step) == 10
+
+
+@needs_devices
+def test_mesh_rejects_mask_and_mismatched_mesh(setup):
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    topo = make_topology("uniform", spec=spec)
+    eng = HSGD(model.loss, sgd(0.05), topo,
+               executor=MeshExecutor(make_host_mesh(group_sizes=gs)))
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    mask = np.ones(N, bool)
+    with pytest.raises(NotImplementedError, match="sim"):
+        eng.step(st, jax.tree.map(jnp.asarray, ds.batch(0, 8)), mask=mask)
+    # a flat 8-replica mesh does not mirror the 2-level hierarchy
+    flat = make_host_mesh(n_data=8)
+    with pytest.raises((AssertionError, ValueError)):
+        HSGD(model.loss, sgd(0.05), make_topology("uniform", spec=spec),
+             executor=MeshExecutor(flat))
+
+
+# ---------------------------------------------------------------------------
+# subprocess: the equivalence suite on a forced 8-device host platform, so
+# plain single-device `pytest -q` runs still exercise the mesh backend
+# ---------------------------------------------------------------------------
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.core import HSGD, HierarchySpec, MeshExecutor, make_topology
+from repro.data import FederatedDataset, label_shard_partition, make_classification
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import sgd
+from repro.launch.mesh import make_host_mesh
+
+x, y = make_classification(0, num_classes=8, dim=16, per_class=40)
+parts = label_shard_partition(y, [[j] for j in range(8)])
+ds = FederatedDataset(x, y, parts)
+model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=24,
+                                 num_classes=8))
+batch_fn = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+
+def diff(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda p, q: float(jnp.abs(p - q).max()), a, b)))
+
+def run(topo, executor):
+    eng = HSGD(model.loss, sgd(0.05), topo, executor=executor)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, _ = eng.run_rounds(st, batch_fn, 10)
+    return st
+
+for gs, periods in [((2, 4), (8, 4)), ((2, 2, 2), (8, 4, 2))]:
+    spec = HierarchySpec(gs, periods)
+    mk = lambda: make_topology("uniform", spec=spec)
+    s_sim = run(mk(), "sim")
+    s_pmean = run(mk(), MeshExecutor(make_host_mesh(group_sizes=gs)))
+    s_exact = run(mk(), MeshExecutor(make_host_mesh(group_sizes=gs),
+                                     exact=True))
+    d_pmean = diff(s_sim.params, s_pmean.params)
+    d_exact = diff(s_sim.params, s_exact.params)
+    assert d_pmean < 5e-6, (gs, d_pmean)
+    assert d_exact == 0.0, (gs, d_exact)
+print("MESH_EQUIV_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_equivalence_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MESH_EQUIV_OK" in r.stdout

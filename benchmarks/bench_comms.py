@@ -1,0 +1,104 @@
+"""Communication benchmark: bytes/step and steps/sec per codec x topology.
+
+The paper's thesis is convergence per COMMUNICATION COST; this benchmark
+makes the cost side concrete.  For each codec (off / identity / int8 /
+sign / topk) on a 2-level and a 3-level hierarchy it reports
+
+* the static wire accounting (``repro.comms.WireStats``): per-worker payload
+  bytes, per-level bytes per sync, bytes/step over the schedule, and the
+  payload reduction vs the f32 baseline (int8 ~4x, sign ~30x);
+* measured steps/sec of the live training harness (sim executor), so codec
+  compute overhead is visible next to the byte savings.
+
+Emits ``BENCH_comms.json`` (schema: {topology: {codec: record}}) — the CI
+smoke step runs ``--smoke`` and uploads it as an artifact, so the numbers
+regenerate on every push and bit-rot fails CI.  The byte ratios are
+asserted (they are static — no timing noise); throughput is reported only.
+
+    PYTHONPATH=src python benchmarks/bench_comms.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+# runnable both as `python -m benchmarks.bench_comms` and as a plain script
+# (`python benchmarks/bench_comms.py`, the CI smoke invocation)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import make_world, steps_per_sec  # noqa: E402
+from repro.comms import Comms
+from repro.core import HSGD, HierarchySpec, make_topology
+from repro.optim import sgd
+
+TOPOLOGIES = {
+    "two_level": HierarchySpec((2, 4), (8, 2)),
+    "three_level": HierarchySpec((2, 2, 2), (8, 4, 2)),
+}
+
+CODECS = {
+    "off": None,                       # comms disabled: the baseline path
+    "identity": Comms("identity"),     # FlatBucket fusion, exact values
+    "int8": Comms("int8"),
+    "sign": Comms("sign"),
+    "topk": Comms("topk"),
+}
+
+
+def bench_one(ds, model, spec: HierarchySpec, comms, T: int,
+              measure: bool) -> dict:
+    topo = make_topology("uniform", spec=spec)
+    eng = HSGD(model.loss, sgd(0.08), topo, comms=comms)
+    state = eng.init(jax.random.PRNGKey(0), model.init)
+    rec = {}
+    ws = eng.wire_stats(state)
+    if ws is not None:
+        rec.update(ws.summary(T))
+    if measure:
+        rec["steps_per_sec"] = round(
+            steps_per_sec(ds, model, make_topology("uniform", spec=spec),
+                          T=T, use_rounds=True, warmup=spec.G, comms=comms),
+            2)
+    return rec
+
+
+def main(quick: bool = True, out: str = "BENCH_comms.json",
+         measure: bool = True) -> dict:
+    ds, model = make_world(n_workers=8)
+    T = 64 if quick else 512
+    report = {"steps": T, "topologies": {}}
+    for tname, spec in TOPOLOGIES.items():
+        row = {"spec": {"group_sizes": spec.group_sizes,
+                        "periods": spec.periods}}
+        for cname, comms in CODECS.items():
+            print(f"... {tname} / {cname}")
+            row[cname] = bench_one(ds, model, spec, comms, T, measure)
+        # static sanity: the whole point of the codecs (driver-asserted)
+        ident = row["identity"]["payload_bytes_per_worker"]
+        assert row["int8"]["compression_ratio"] > 3.5, row["int8"]
+        assert row["sign"]["compression_ratio"] > 20.0, row["sign"]
+        assert row["identity"]["compression_ratio"] == 1.0
+        assert row["int8"]["payload_bytes_per_worker"] < ident
+        report["topologies"][tname] = row
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out}")
+    summary = {t: {c: row[c].get("compression_ratio")
+                   for c in CODECS if c != "off"}
+               for t, row in report["topologies"].items()}
+    print(json.dumps(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: short run, skip throughput timing")
+    ap.add_argument("--full", action="store_true", help="longer runs")
+    ap.add_argument("--out", default="BENCH_comms.json")
+    args = ap.parse_args()
+    main(quick=not args.full, out=args.out, measure=not args.smoke)

@@ -1,0 +1,32 @@
+"""repro.comms — what a sync event MOVES, made explicit and measurable.
+
+Three parts (see the module docstrings for the design notes):
+
+* :mod:`repro.comms.flat` — ``FlatBucket``: fuse a worker-stacked pytree
+  into one contiguous buffer per dtype, so a sync aggregates O(dtypes)
+  buffers instead of O(leaves) arrays;
+* :mod:`repro.comms.codecs` — the ``Compressor`` registry (identity / int8 /
+  sign-1bit / top-k with error feedback), Pallas-backed wire codecs that
+  compose with any ``Aggregator``;
+* :mod:`repro.comms.wire` — ``WireStats``: static per-level bytes-per-sync
+  accounting from the encoded payload specs.
+
+Enable on an engine with ``HSGD(..., comms="int8")`` (or a
+:class:`~repro.comms.sync.Comms` for full control); the default ``comms=None``
+is bitwise-identical to the pre-comms engine.
+"""
+from repro.comms.codecs import (COMPRESSORS, Compressor, IdentityCompressor,
+                                Int8Compressor, SignCompressor,
+                                TopKCompressor, make_compressor,
+                                register_compressor)
+from repro.comms.flat import FlatBucket
+from repro.comms.sync import Comms, CommsLike, make_comms
+from repro.comms.wire import WireArray, WireStats
+
+__all__ = [
+    "Comms", "CommsLike", "make_comms",
+    "FlatBucket",
+    "Compressor", "IdentityCompressor", "Int8Compressor", "SignCompressor",
+    "TopKCompressor", "COMPRESSORS", "make_compressor", "register_compressor",
+    "WireArray", "WireStats",
+]

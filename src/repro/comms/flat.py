@@ -1,0 +1,98 @@
+"""FlatBucket: DDP-style bucketization of a worker-stacked pytree.
+
+The engine's sync events historically aggregated pytrees leaf by leaf — one
+collective (or one reshape-mean) per parameter array, O(leaves) sync
+operands in the lowered program.  A :class:`FlatBucket` flattens the tree
+into ONE contiguous ``(workers, length)`` buffer per dtype (dtypes cannot
+share a buffer without changing the payload bytes), so a sync event
+aggregates O(dtypes) fused buffers instead; the inverse spec — which slice
+of which bucket is which leaf — is computed once per tree signature and
+cached, so steady-state rounds pay only the concatenate/slice data movement
+that XLA fuses anyway.
+
+Leaves keep their leading worker axis: under the sim executor buffers are
+``(n, length)``, under the mesh executor each shard flattens its own
+``(1, ...)`` leaves to ``(1, length)`` and the named-axis collective runs on
+the fused buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one leaf lives inside its bucket."""
+    bucket: str                 # dtype-name key
+    offset: int                 # element offset within the per-worker row
+    size: int                   # elements per worker
+    shape: Tuple[int, ...]      # full leaf shape (worker axis included)
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatBucket:
+    """Cached flatten/unflatten plan for one tree signature.
+
+    Build via :meth:`plan` (memoized on ``(treedef, shapes, dtypes)``);
+    ``flatten``/``unflatten`` are exact inverses for any tree matching the
+    signature — bucketization alone never changes values, only layout.
+    """
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    lengths: Dict[str, int]     # per-worker elements per bucket
+    dtypes: Dict[str, Any]      # bucket key -> jnp dtype
+
+    @classmethod
+    def plan(cls, tree) -> "FlatBucket":
+        leaves, treedef = jax.tree.flatten(tree)
+        sig = (treedef, tuple((np.shape(l), jnp.dtype(l.dtype).name)
+                              for l in leaves))
+        hit = _PLANS.get(sig)
+        if hit is not None:
+            return hit
+        slots, lengths, dtypes = [], {}, {}
+        for leaf in leaves:
+            shape = np.shape(leaf)
+            assert len(shape) >= 1, \
+                "bucketized leaves need a leading worker axis"
+            key = jnp.dtype(leaf.dtype).name
+            size = int(np.prod(shape[1:], dtype=np.int64)) if len(shape) > 1 \
+                else 1
+            off = lengths.get(key, 0)
+            slots.append(LeafSlot(key, off, size, tuple(shape), leaf.dtype))
+            lengths[key] = off + size
+            dtypes[key] = leaf.dtype
+        fb = cls(treedef, tuple(slots), dict(lengths), dict(dtypes))
+        _PLANS[sig] = fb
+        return fb
+
+    def flatten(self, tree) -> Dict[str, jax.Array]:
+        """tree -> {dtype-name: (workers, length)} fused buffers."""
+        leaves = self.treedef.flatten_up_to(tree)
+        rows: Dict[str, list] = {}
+        for slot, leaf in zip(self.slots, leaves):
+            rows.setdefault(slot.bucket, []).append(
+                leaf.reshape(leaf.shape[0], -1))
+        return {k: (v[0] if len(v) == 1 else jnp.concatenate(v, axis=1))
+                for k, v in rows.items()}
+
+    def unflatten(self, bufs: Dict[str, jax.Array]):
+        """Inverse of :meth:`flatten` (tolerates a changed worker-axis size,
+        e.g. per-shard buffers under the mesh executor)."""
+        leaves = []
+        for slot in self.slots:
+            buf = bufs[slot.bucket]
+            piece = jax.lax.slice_in_dim(buf, slot.offset,
+                                         slot.offset + slot.size, axis=1)
+            leaves.append(piece.reshape((buf.shape[0],) + slot.shape[1:])
+                          .astype(slot.dtype))
+        return self.treedef.unflatten(leaves)
+
+
+_PLANS: Dict[Any, FlatBucket] = {}

@@ -1,0 +1,117 @@
+"""The resolved comms plan: bucketization switch + codec, bound per engine.
+
+``HSGD(..., comms=...)`` resolves its argument through :func:`make_comms`
+into a :class:`Comms` (or None = comms off, the bitwise-identical default
+path).  A ``Comms`` owns HOW a sync payload crosses the wire — fused
+flat-buffer buckets or raw leaves, and through which codec — while staying
+agnostic to WHO reduces it: executors pass their own ``reduce_fn`` (the
+topology's segment-mean under sim, the aggregator's named-axis collective
+under mesh), so one comms plan serves both backends and the aggregator's
+``encode``/mean/``decode`` contract is untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.codecs import Compressor, CompressorLike, make_compressor
+from repro.comms.flat import FlatBucket
+from repro.comms.wire import WireArray
+
+
+class Comms:
+    """compressor: a codec instance, registry name, or None (identity).
+    bucket: fuse the tree into one buffer per dtype before encoding
+    (O(dtypes) sync operands); False keeps leaf-wise payloads (O(leaves),
+    but still codec-compressed).  Extra kwargs construct the codec by name
+    (e.g. ``Comms("int8", block=128)``)."""
+
+    def __init__(self, compressor: CompressorLike = None, *,
+                 bucket: bool = True, **codec_kwargs):
+        self.codec = make_compressor(compressor, **codec_kwargs)
+        self.bucket = bool(bucket)
+
+    def __repr__(self):
+        return f"Comms({self.codec!r}, bucket={self.bucket})"
+
+    # -- payload layout -----------------------------------------------------
+    def _payloads(self, tree):
+        """tree -> (payload pytree the codec sees, FlatBucket | None)."""
+        if not self.bucket:
+            return tree, None
+        fb = FlatBucket.plan(tree)
+        return fb.flatten(tree), fb
+
+    # -- engine state -------------------------------------------------------
+    def init_state(self, params) -> Optional[Any]:
+        """Per-worker error-feedback residual (zeros), or None for
+        stateless codecs.  Residuals are f32 payload-shaped, so they ride
+        the same worker-axis sharding as params."""
+        if not self.codec.stateful:
+            return None
+        payload, _ = self._payloads(params)
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                            payload)
+
+    # -- the sync ------------------------------------------------------------
+    def sync(self, tree, reduce_fn: Callable[[Any], Any],
+             residual: Optional[Any] = None) -> Tuple[Any, Optional[Any]]:
+        """Aggregate ``tree`` through the wire: bucketize, codec-roundtrip
+        each worker's payload (+ error feedback when ``residual`` is
+        threaded), reduce the decoded payloads with ``reduce_fn``, restore
+        the tree.  Returns (aggregated tree, new residual)."""
+        payload, fb = self._payloads(tree)
+        leaves, tdef = jax.tree.flatten(payload)
+        if residual is None:
+            rleaves = [None] * len(leaves)
+        else:
+            rleaves = tdef.flatten_up_to(residual)
+        pairs = [self.codec.roundtrip(x, r) for x, r in zip(leaves, rleaves)]
+        sent = tdef.unflatten([s for s, _ in pairs])
+        new_res = None
+        if self.codec.stateful and residual is not None:
+            new_res = tdef.unflatten([r for _, r in pairs])
+        reduced = reduce_fn(sent)
+        out = fb.unflatten(reduced) if fb is not None else reduced
+        return out, new_res
+
+    # -- accounting ----------------------------------------------------------
+    def payload_spec(self, params) -> Tuple[Tuple[WireArray, ...], int]:
+        """Static (wire arrays, element count) for ONE worker's payload —
+        the :class:`~repro.comms.wire.WireStats` input."""
+        arrays = []
+        total = 0
+        if self.bucket:
+            fb = FlatBucket.plan(params)
+            for key in sorted(fb.lengths):
+                n = fb.lengths[key]
+                total += n
+                for a in self.codec.wire_spec(n, fb.dtypes[key]):
+                    arrays.append(WireArray(f"{key}.{a.name}", a.shape,
+                                            a.dtype))
+        else:
+            for i, leaf in enumerate(jax.tree.leaves(params)):
+                n = int(np.prod(np.shape(leaf)[1:], dtype=np.int64))
+                total += n
+                for a in self.codec.wire_spec(n, leaf.dtype):
+                    arrays.append(WireArray(f"leaf{i}.{a.name}", a.shape,
+                                            a.dtype))
+        return tuple(arrays), total
+
+
+CommsLike = Union[str, Compressor, Comms, None]
+
+
+def make_comms(spec: CommsLike = None, **kwargs) -> Optional[Comms]:
+    """Resolve the ``HSGD(..., comms=...)`` argument: None = off (default,
+    bitwise-identical to the pre-comms engine), a codec name or Compressor
+    = bucketized comms with that codec, or a ready :class:`Comms`."""
+    if spec is None and not kwargs:
+        return None
+    if isinstance(spec, Comms):
+        assert not kwargs, "kwargs only apply when constructing by name"
+        return spec
+    return Comms(spec, **kwargs)

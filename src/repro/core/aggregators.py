@@ -185,6 +185,11 @@ def make_aggregator(spec: AggregatorLike = None, *,
     """Resolve an aggregator from an instance, a registry name, or the legacy
     ``sync_dtype`` flag (``'bfloat16'`` -> CompressedAggregator)."""
     if isinstance(spec, Aggregator):
+        if sync_dtype is not None:
+            raise ValueError(
+                f"sync_dtype={sync_dtype!r} only applies when constructing "
+                f"by name; got the instance {spec!r} — set its dtype at "
+                f"construction instead")
         assert not kwargs, "kwargs only apply when constructing by name"
         return spec
     if spec is None:

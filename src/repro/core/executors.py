@@ -85,6 +85,35 @@ class Executor(abc.ABC):
         ...
 
 
+def _apply_sync(plan, reduce_fn, params, opt_state, cstate):
+    """Shared sync dispatch for both executors: apply ``reduce_fn`` (the
+    backend's aggregation — topology segment-means under sim, named-axis
+    collectives under mesh) either directly or through the comms wire
+    (bucketize + codec roundtrip + reduce), optimizer moments riding the
+    same path (stateless: no error feedback on moments)."""
+    if plan.comms is None:
+        params = reduce_fn(params)
+        if plan.aggregate_opt_state:
+            opt_state = _merge_moments(
+                opt_state, reduce_fn(_moments_only(opt_state)))
+        return params, opt_state, cstate
+    params, cstate = plan.comms.sync(params, reduce_fn, residual=cstate)
+    if plan.aggregate_opt_state:
+        agg, _ = plan.comms.sync(_moments_only(opt_state), reduce_fn)
+        opt_state = _merge_moments(opt_state, agg)
+    return params, opt_state, cstate
+
+
+def _keep_rows(mask, new, old):
+    """Row-select on the leading worker axis: mask True -> ``new``, False ->
+    ``old`` — the one definition of per-worker state selection (runtime
+    participation masks, partial-group restores)."""
+    def sel(a, b):
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, new, old)
+
+
 def _stack_batches(n_local: int, batches):
     """length-``n_local`` tuple of per-step batches -> one (n_local, ...)
     stacked pytree, INSIDE the jitted graph so one round is exactly one
@@ -100,42 +129,60 @@ def _stack_batches(n_local: int, batches):
 class SimExecutor(Executor):
     """n = tens..hundreds of CPU "workers" on one device; aggregations are
     reshapes/means (uniform hierarchy) or membership segment-means (arbitrary
-    fixed groupings, Theorem 1) through ``topology.aggregate``."""
+    fixed groupings, Theorem 1) through ``topology.aggregate``.
 
-    def _apply_event(self, params, opt_state, event: SyncEvent, mask=None):
+    With a comms plan bound, every sync routes through
+    ``plan.comms.sync``: the tree is fused into flat per-dtype buckets,
+    each worker's payload codec-roundtripped (error-feedback residuals
+    threaded through ``HSGDState.comms``), and ``topology.aggregate`` runs
+    on the O(dtypes) buffers — the aggregator rule is applied unchanged."""
+
+    def _apply_event(self, params, opt_state, cstate, event: SyncEvent,
+                     mask=None):
         plan = self.plan
-        params = plan.topology.aggregate(params, event, mask=mask)
-        if plan.aggregate_opt_state:
-            # average optimizer moments with the same schedule as the
-            # params (paper's SGD has none; momentum/adam extension)
-            agg = plan.topology.aggregate(_moments_only(opt_state), event,
-                                          mask=mask)
-            opt_state = _merge_moments(opt_state, agg)
-        return params, opt_state
+        reduce_fn = lambda tree: plan.topology.aggregate(tree, event,
+                                                         mask=mask)
+        new_p, new_o, new_c = _apply_sync(plan, reduce_fn, params, opt_state,
+                                          cstate)
+        if plan.comms is not None:
+            # topology.aggregate keeps non-participants' rows untouched, but
+            # the comms path hands it codec-roundtripped payloads — restore
+            # the true state (and unconsumed residual) of workers a
+            # partial-group event did not sync
+            part = plan.topology.participants(event)
+            if part is not None:
+                keep = jnp.asarray(part)
+                new_p = _keep_rows(keep, new_p, params)
+                new_o = _keep_rows(keep, new_o, opt_state)
+                if cstate is not None:
+                    new_c = _keep_rows(keep, new_c, cstate)
+            if mask is not None and cstate is not None:
+                # runtime-masked workers still RECEIVE the aggregate
+                # (Algorithm 1) but transmitted nothing: their
+                # error-feedback residual must not be consumed
+                new_c = _keep_rows(jnp.asarray(mask).astype(bool),
+                                   new_c, cstate)
+        return new_p, new_o, new_c
 
     # -- one combined step per event ------------------------------------------
     def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
         local_update = self.plan.local_update_fn()
 
-        def apply_mask(new, old, mask):
-            """Non-participating workers keep their previous state."""
-            def sel(a, b):
-                m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
-                return jnp.where(m, a, b)
-            return jax.tree.map(sel, new, old)
-
         def step(state: HSGDState, batch, mask=None):
             params, opt_state, metrics = jax.vmap(local_update)(
                 state.params, state.opt_state, batch)
+            cstate = state.comms
             if masked:
-                params = apply_mask(params, state.params, mask)
-                opt_state = apply_mask(opt_state, state.opt_state, mask)
+                # non-participating workers keep their previous state
+                params = _keep_rows(mask, params, state.params)
+                opt_state = _keep_rows(mask, opt_state, state.opt_state)
             if event is not None:
                 amask = mask if masked else None
-                params, opt_state = self._apply_event(params, opt_state,
-                                                      event, mask=amask)
+                params, opt_state, cstate = self._apply_event(
+                    params, opt_state, cstate, event, mask=amask)
             metrics = jax.tree.map(lambda m: m.mean(), metrics)
-            return HSGDState(params, opt_state, state.step + 1), metrics
+            return HSGDState(params, opt_state, state.step + 1,
+                             cstate), metrics
 
         if not self.plan._jit:
             return step
@@ -162,10 +209,12 @@ class SimExecutor(Executor):
 
             (params, opt_state), metrics = jax.lax.scan(
                 body, (state.params, state.opt_state), stacked)
+            cstate = state.comms
             if rnd.event is not None:
-                params, opt_state = self._apply_event(params, opt_state,
-                                                      rnd.event)
-            state = HSGDState(params, opt_state, state.step + rnd.n_local)
+                params, opt_state, cstate = self._apply_event(
+                    params, opt_state, cstate, rnd.event)
+            state = HSGDState(params, opt_state, state.step + rnd.n_local,
+                              cstate)
             return state, metrics  # metrics stacked (n_local,) per entry
 
         if not self.plan._jit:
@@ -234,31 +283,36 @@ class MeshExecutor(Executor):
 
     # -- the shard_mapped round body ----------------------------------------
     def _round_core(self, event: Optional[SyncEvent]):
-        """(params, opt_state, stacked_batches) -> (params, opt_state,
-        metrics) with the local scan and the event collective under one
-        shard_map; each shard holds exactly one worker.  The round length
-        is carried by the stacked batch's leading axis."""
+        """(params, opt_state, comms_state, stacked_batches) -> (params,
+        opt_state, comms_state, metrics) with the local scan and the event
+        collective under one shard_map; each shard holds exactly one worker.
+        The round length is carried by the stacked batch's leading axis.
+
+        With a comms plan bound, each shard fuses its ``(1, ...)`` leaves
+        into flat per-dtype buffers, codec-roundtrips them (error-feedback
+        residuals are sharded like params), and the named-axis collective
+        runs once per BUFFER — O(dtypes) pmeans per sync in the lowered
+        program instead of O(leaves)."""
         plan, mesh, rep = self.plan, self.mesh, self.rep_axes
         topo = plan.topology
         vupdate = jax.vmap(plan.local_update_fn())
         axes = topo.level_axes(event, rep) if event is not None else ()
         wvec = topo._event_weights(event, None) if event is not None else None
 
-        def apply_event(params, opt_state, w):
+        def apply_event(params, opt_state, cstate, w):
             agg = topo.aggregator
             if self.exact:
                 one = lambda x: agg.gather_aggregate(
                     x, rep, topo.spec.group_sizes, event.level, weight=w)
             else:
                 one = lambda x: agg.axis_aggregate(x, axes, weight=w)
-            sync = lambda tree: jax.tree.map(one, tree)
-            params = sync(params)
-            if plan.aggregate_opt_state:
-                opt_state = _merge_moments(opt_state,
-                                           sync(_moments_only(opt_state)))
-            return params, opt_state
+            # partial-group events never reach the mesh backend
+            # (level_axes asserts event.groups is None), so no
+            # participant restore is needed here
+            return _apply_sync(plan, lambda tree: jax.tree.map(one, tree),
+                               params, opt_state, cstate)
 
-        def body(params, opt_state, stacked, w):
+        def body(params, opt_state, cstate, stacked, w):
             # per-shard shapes: leading worker axis == 1
             def local_block(carry, batch):
                 p, o = carry
@@ -268,26 +322,32 @@ class MeshExecutor(Executor):
             (params, opt_state), metrics = jax.lax.scan(
                 local_block, (params, opt_state), stacked)
             if event is not None:
-                params, opt_state = apply_event(params, opt_state, w)
+                params, opt_state, cstate = apply_event(params, opt_state,
+                                                        cstate, w)
             # worker-mean of the per-step metrics, replicated everywhere
             metrics = jax.tree.map(lambda m: jax.lax.pmean(m, rep), metrics)
-            return params, opt_state, metrics
+            return params, opt_state, cstate, metrics
 
-        def core(params, opt_state, stacked):
+        def core(params, opt_state, cstate, stacked):
             pspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), params)
             ospec = jax.tree.map(lambda x: self._lead_spec(x.ndim), opt_state)
+            cspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), cstate)
             bspec = jax.tree.map(lambda x: self._lead_spec(x.ndim, 1), stacked)
+            # pallas_call (the comms codec kernels) has no shard_map
+            # replication rule; the collective outputs are replicated by
+            # construction (pmean/all_gather), so skipping the check is safe
+            kw = dict(check_rep=False) if plan.comms is not None else {}
             if wvec is None:
                 fn = shard_map(
-                    lambda p, o, b: body(p, o, b, None), mesh=mesh,
-                    in_specs=(pspec, ospec, bspec),
-                    out_specs=(pspec, ospec, P()))
-                return fn(params, opt_state, stacked)
+                    lambda p, o, c, b: body(p, o, c, b, None), mesh=mesh,
+                    in_specs=(pspec, ospec, cspec, bspec),
+                    out_specs=(pspec, ospec, cspec, P()), **kw)
+                return fn(params, opt_state, cstate, stacked)
             fn = shard_map(
-                lambda p, o, b, w: body(p, o, b, w), mesh=mesh,
-                in_specs=(pspec, ospec, bspec, self._lead_spec(1)),
-                out_specs=(pspec, ospec, P()))
-            return fn(params, opt_state, stacked, jnp.asarray(wvec))
+                lambda p, o, c, b, w: body(p, o, c, b, w), mesh=mesh,
+                in_specs=(pspec, ospec, cspec, bspec, self._lead_spec(1)),
+                out_specs=(pspec, ospec, cspec, P()), **kw)
+            return fn(params, opt_state, cstate, stacked, jnp.asarray(wvec))
 
         return core
 
@@ -300,11 +360,12 @@ class MeshExecutor(Executor):
         core = self._round_core(event)
 
         def step(state: HSGDState, batch):
-            params, opt_state, metrics = core(
-                state.params, state.opt_state,
+            params, opt_state, cstate, metrics = core(
+                state.params, state.opt_state, state.comms,
                 jax.tree.map(lambda x: x[None], batch))
             metrics = jax.tree.map(lambda m: m[0], metrics)
-            return HSGDState(params, opt_state, state.step + 1), metrics
+            return HSGDState(params, opt_state, state.step + 1,
+                             cstate), metrics
 
         if not self.plan._jit:
             return step
@@ -315,9 +376,10 @@ class MeshExecutor(Executor):
 
         def round_fn(state: HSGDState, batches):
             stacked = _stack_batches(rnd.n_local, batches)
-            params, opt_state, metrics = core(state.params, state.opt_state,
-                                              stacked)
-            state = HSGDState(params, opt_state, state.step + rnd.n_local)
+            params, opt_state, cstate, metrics = core(
+                state.params, state.opt_state, state.comms, stacked)
+            state = HSGDState(params, opt_state, state.step + rnd.n_local,
+                              cstate)
             return state, metrics  # metrics stacked (n_local,) per entry
 
         if not self.plan._jit:

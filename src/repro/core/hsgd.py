@@ -45,6 +45,7 @@ class HSGDState:
     params: Any      # leading worker axis n
     opt_state: Any   # leading worker axis n
     step: jax.Array  # scalar int32
+    comms: Any = None  # codec state (error-feedback residuals), worker axis n
 
 
 # ---------------------------------------------------------------------------
@@ -86,11 +87,20 @@ class HSGD:
     ``executor`` picks the execution backend: ``"sim"`` (default; vmap on one
     device), ``"mesh"`` (shard_map over a hierarchy-shaped device mesh), an
     :class:`~repro.core.executors.Executor` instance, or a registered name.
+
+    ``comms`` selects the communication plan (:func:`repro.comms.make_comms`):
+    None (default) keeps the leaf-wise aggregation path bitwise-identical to
+    before; a codec name ("identity" | "int8" | "sign" | "topk") or a
+    :class:`~repro.comms.Comms` routes every sync through fused flat-buffer
+    payloads + that wire codec, and turns on per-level wire accounting
+    (:meth:`wire_stats`; :meth:`run_rounds` history records additionally
+    carry ``wire_bytes`` — the per-step :meth:`step` path does not).
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
                  topology: Topology, *, aggregate_opt_state: bool = True,
-                 jit: bool = True, accum_steps: int = 1, executor=None):
+                 jit: bool = True, accum_steps: int = 1, executor=None,
+                 comms=None):
         """accum_steps > 1: each H-SGD iteration accumulates gradients over
         that many microbatches (scan) before the single optimizer update —
         same semantics as one large-batch step (SGD is linear in the
@@ -101,7 +111,10 @@ class HSGD:
         self.aggregate_opt_state = aggregate_opt_state
         self._jit = jit
         self.accum_steps = accum_steps
-        # local import: executors imports this module for HSGDState/Round
+        # local imports: executors imports this module for HSGDState/Round,
+        # and comms reaches back into core.topology
+        from repro.comms import make_comms
+        self.comms = make_comms(comms)
         from repro.core.executors import make_executor
         self.executor = make_executor(executor)
         self.executor.bind(self)
@@ -116,7 +129,8 @@ class HSGD:
         opt0 = self.optimizer.init(params0)
         opt_state = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), opt0)
-        state = HSGDState(params, opt_state, jnp.zeros((), jnp.int32))
+        cstate = self.comms.init_state(params) if self.comms else None
+        state = HSGDState(params, opt_state, jnp.zeros((), jnp.int32), cstate)
         return self.executor.place(state)
 
     # -- building blocks ------------------------------------------------------
@@ -192,11 +206,19 @@ class HSGD:
         ``eval_every``-th step so ``eval_fn(state, t)`` fires exactly there
         (plus at t+1 == T), and its results are merged into the matching
         record — within a round the intermediate states never materialize,
-        which is where the speed comes from."""
+        which is where the speed comes from.
+
+        With comms enabled, every record additionally carries ``wire_bytes``
+        — the bytes the step's sync event moved (0 between syncs), computed
+        statically from the payload specs (no device work)."""
         t0 = int(state.step)
         cut = eval_every if (eval_fn is not None and eval_every) else 0
-        rounds = compile_schedule(self.topology.schedule(t0 + T)[t0:],
-                                  cut_every=cut, t0=t0)
+        schedule = self.topology.schedule(t0 + T)[t0:]
+        rounds = compile_schedule(schedule, cut_every=cut, t0=t0)
+        wire = None
+        if self.comms is not None:
+            ws = self.wire_stats(state)
+            wire = [ws.bytes_for_event(ev) for ev in schedule]
         raw: List[Tuple[int, int, Dict]] = []  # (t_end, n_local, metrics)
         evals: Dict[int, Dict] = {}
         t = t0
@@ -217,11 +239,35 @@ class HSGD:
                 step_no = t_end - n_local + i + 1
                 rec = {"t": step_no,
                        **{k: float(v[i]) for k, v in metrics.items()}}
+                if wire is not None:
+                    rec["wire_bytes"] = wire[step_no - t0 - 1]
                 rec.update(evals.get(step_no, {}))
                 history.append(rec)
         return state, history
 
     # -- inspection ------------------------------------------------------------
+    def wire_stats(self, state: HSGDState):
+        """Static per-level wire accounting for this engine's sync payloads
+        (:class:`repro.comms.WireStats`), or None with comms disabled.
+        Counts everything a sync actually ships: params, plus the optimizer
+        moments when ``aggregate_opt_state`` puts them on the wire."""
+        if self.comms is None:
+            return None
+        from repro.comms import WireArray, WireStats
+        parts = [("params", state.params)]
+        if self.aggregate_opt_state:
+            moments = _moments_only(state.opt_state)
+            if jax.tree.leaves(moments):
+                parts.append(("moments", moments))
+        payload: List[Any] = []
+        n_elements = 0
+        for name, tree in parts:
+            arrays, n = self.comms.payload_spec(tree)
+            payload += [WireArray(f"{name}.{a.name}", a.shape, a.dtype)
+                        for a in arrays]
+            n_elements += n
+        return WireStats(self.topology, tuple(payload), n_elements)
+
     def mean_params(self, state: HSGDState):
         """w̄^t (the analysis object; observable only at t = aG)."""
         return jax.tree.map(

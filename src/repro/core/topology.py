@@ -98,6 +98,14 @@ class Topology(abc.ABC):
             f"{type(self).__name__} does not map onto named mesh axes; "
             "the mesh backend needs a uniform hierarchy (UniformTopology)")
 
+    # -- participation ------------------------------------------------------
+    def participants(self, event: SyncEvent) -> Optional[np.ndarray]:
+        """Static (n,) bool: the workers whose state ``event`` replaces, or
+        None for all of them.  ``aggregate`` keeps non-participants' rows
+        untouched (GroupedTopology partial-group events); alternate sync
+        paths (the comms wire) must honor the same contract."""
+        return None
+
     # -- telemetry ----------------------------------------------------------
     def level_groupings(self) -> Dict[int, Grouping]:
         """Worker partition into the level-ℓ subtrees, for every internal
@@ -215,6 +223,11 @@ class GroupedTopology(Topology):
 
     def level_groupings(self) -> Dict[int, Grouping]:
         return {1: self.grouping}
+
+    def participants(self, event: SyncEvent) -> Optional[np.ndarray]:
+        if event.level == 1 or event.groups is None:
+            return None
+        return np.asarray(event.groups)[self._assignment]
 
     def aggregate(self, tree, event: SyncEvent, mask=None):
         assert event.level in (1, 2), event

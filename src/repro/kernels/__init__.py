@@ -1,3 +1,6 @@
-from repro.kernels.ops import flash_attention, rglru_scan, ssd_scan
+from repro.kernels.ops import (flash_attention, int8_dequantize,
+                               int8_quantize, rglru_scan, sign_pack,
+                               sign_unpack, ssd_scan)
 
-__all__ = ["flash_attention", "rglru_scan", "ssd_scan"]
+__all__ = ["flash_attention", "rglru_scan", "ssd_scan",
+           "int8_quantize", "int8_dequantize", "sign_pack", "sign_unpack"]

@@ -1,0 +1,172 @@
+"""Communication codecs as Pallas TPU kernels.
+
+The payload a ``SyncEvent`` moves is a first-class design axis (signSGD,
+QSGD, DGC); these kernels produce the *wire formats* the ``repro.comms``
+codecs ship over the collective:
+
+* :func:`int8_quantize` / :func:`int8_dequantize` — per-block symmetric int8
+  (block max-scale): ``q = round(x * 127 / max|x_block|)``, one f32 scale per
+  block.  ~4x fewer payload bytes than f32.
+* :func:`sign_pack` / :func:`sign_unpack` — 1-bit sign compression: 8 signs
+  packed per uint8 plus a per-block magnitude ``mean|x_block|`` (the L2-optimal
+  scale for a sign vector, as in 1-bit SGD / EF-signSGD).  ~32x fewer bytes.
+
+All kernels view a payload as rows of ``block`` contiguous elements (rows =
+workers or worker-shards, columns = the flat bucket).  The wrappers zero-pad
+the trailing block and pass the count of *real* elements per block, so block
+scales are computed over real entries only — this keeps the codecs idempotent
+(re-encoding a decoded payload is a fixed point), which the property suite
+asserts.  Like the other repo kernels they run compiled on TPU and under
+``interpret=True`` elsewhere (selected by the :mod:`repro.kernels.ops`
+entry points).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad_cols(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    c = x.shape[-1]
+    nb = -(-c // block)
+    cp = nb * block
+    if cp != c:
+        x = jnp.pad(x, ((0, 0), (0, cp - c)))
+    return x, nb
+
+
+def _block_counts(c: int, block: int, nb: int) -> jax.Array:
+    """(1, nb) f32: number of real (unpadded) elements in each block."""
+    full = jnp.full((1, nb), float(block), jnp.float32)
+    tail = c - (nb - 1) * block
+    return full.at[0, nb - 1].set(float(tail))
+
+
+# ---------------------------------------------------------------------------
+# int8: per-block symmetric quantization, block max-scale
+# ---------------------------------------------------------------------------
+def _int8_quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                      # (1, B)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)      # (1, 1)
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q_ref[...] = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def int8_quantize(x: jax.Array, *, block: int = 256,
+                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) float -> (q int8 (R, C), scale f32 (R, ceil(C/block))).
+
+    Zero padding never disturbs the block max, so the trailing block needs no
+    special casing here (unlike :func:`sign_pack`)."""
+    r, c = x.shape
+    xp, nb = _pad_cols(x.astype(jnp.float32), block)
+    q, s = pl.pallas_call(
+        _int8_quant_kernel,
+        grid=(r, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=(pl.BlockSpec((1, block), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))),
+        out_shape=(jax.ShapeDtypeStruct((r, nb * block), jnp.int8),
+                   jax.ShapeDtypeStruct((r, nb), jnp.float32)),
+        interpret=interpret,
+    )(xp)
+    return q[:, :c], s
+
+
+def _int8_dequant_kernel(q_ref, s_ref, y_ref):
+    y_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def int8_dequantize(q: jax.Array, scale: jax.Array, *, block: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """(q int8 (R, C), scale f32 (R, nb)) -> x f32 (R, C)."""
+    r, c = q.shape
+    qp, nb = _pad_cols(q, block)
+    assert scale.shape == (r, nb), (scale.shape, (r, nb))
+    y = pl.pallas_call(
+        _int8_dequant_kernel,
+        grid=(r, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, nb * block), jnp.float32),
+        interpret=interpret,
+    )(qp, scale)
+    return y[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# sign: 1-bit pack into uint8, block mean-|x| magnitude
+# ---------------------------------------------------------------------------
+def _sign_pack_kernel(x_ref, d_ref, b_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)                      # (1, B)
+    s_ref[...] = (jnp.sum(jnp.abs(x)) / d_ref[0, 0]).reshape(1, 1)
+    bits = (x >= 0).reshape(block // 8, 8).astype(jnp.int32)
+    shift = jax.lax.broadcasted_iota(jnp.int32, (block // 8, 8), 1)
+    packed = jnp.sum(bits << shift, axis=1)
+    b_ref[...] = packed.astype(jnp.uint8).reshape(1, block // 8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sign_pack(x: jax.Array, *, block: int = 1024,
+              interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (R, C) float -> (bits uint8 (R, ceil(C/block)*block/8),
+    scale f32 (R, ceil(C/block))).
+
+    Bit k of byte j in a block is ``x[8j+k] >= 0``; the block scale is
+    ``mean|x|`` over the block's *real* entries (the padded tail is excluded
+    via the per-block denominator), so a re-encoded payload keeps its scale."""
+    assert block % 8 == 0, block
+    r, c = x.shape
+    xp, nb = _pad_cols(x.astype(jnp.float32), block)
+    counts = _block_counts(c, block, nb)
+    bits, s = pl.pallas_call(
+        functools.partial(_sign_pack_kernel, block=block),
+        grid=(r, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, j))],
+        out_specs=(pl.BlockSpec((1, block // 8), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))),
+        out_shape=(jax.ShapeDtypeStruct((r, nb * block // 8), jnp.uint8),
+                   jax.ShapeDtypeStruct((r, nb), jnp.float32)),
+        interpret=interpret,
+    )(xp, counts)
+    return bits, s
+
+
+def _sign_unpack_kernel(b_ref, s_ref, y_ref, *, block: int):
+    packed = b_ref[...].astype(jnp.int32).reshape(block // 8, 1)
+    shift = jax.lax.broadcasted_iota(jnp.int32, (block // 8, 8), 1)
+    bits = (packed >> shift) & 1
+    sgn = bits.astype(jnp.float32) * 2.0 - 1.0
+    y_ref[...] = (sgn * s_ref[0, 0]).reshape(1, block)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "block", "interpret"))
+def sign_unpack(bits: jax.Array, scale: jax.Array, *, size: int,
+                block: int = 1024, interpret: bool = False) -> jax.Array:
+    """(bits uint8 (R, nb*block/8), scale f32 (R, nb)) -> x f32 (R, size):
+    ``+scale`` where the bit is set, ``-scale`` where clear."""
+    assert block % 8 == 0, block
+    r = bits.shape[0]
+    nb = -(-size // block)
+    assert bits.shape == (r, nb * block // 8), (bits.shape, (r, nb * block // 8))
+    assert scale.shape == (r, nb), (scale.shape, (r, nb))
+    y = pl.pallas_call(
+        functools.partial(_sign_unpack_kernel, block=block),
+        grid=(r, nb),
+        in_specs=[pl.BlockSpec((1, block // 8), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, nb * block), jnp.float32),
+        interpret=interpret,
+    )(bits, scale)
+    return y[:, :size]

@@ -11,6 +11,7 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import comms as _comms
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.ssd_scan import ssd_scan as _ssd
@@ -50,3 +51,46 @@ def rglru_scan(a, b, *, block: int = 128, interpret: Optional[bool] = None):
     if interpret:
         block = min(block, 32)
     return _rglru(a, b, block=block, interpret=interpret)
+
+
+# -- communication codecs ----------------------------------------------------
+# NOTE: the block size is part of a codec's *numerics* (scales are per
+# block), so these entry points shrink it in interpret mode like the other
+# kernels — fast CPU tests, consistent within a platform — while the
+# ``repro.comms`` compressors pin their configured block explicitly via
+# ``repro.kernels.comms`` so a codec's wire format never depends on where
+# it traced.
+def _comm_block(block: int, interpret: bool) -> int:
+    return min(block, 64) if interpret else block
+
+
+def int8_quantize(x, *, block: int = 256, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _comms.int8_quantize(x, block=_comm_block(block, interpret),
+                                interpret=interpret)
+
+
+def int8_dequantize(q, scale, *, block: int = 256,
+                    interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _comms.int8_dequantize(q, scale,
+                                  block=_comm_block(block, interpret),
+                                  interpret=interpret)
+
+
+def sign_pack(x, *, block: int = 1024, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _comms.sign_pack(x, block=_comm_block(block, interpret),
+                            interpret=interpret)
+
+
+def sign_unpack(bits, scale, *, size: int, block: int = 1024,
+                interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _comms.sign_unpack(bits, scale, size=size,
+                              block=_comm_block(block, interpret),
+                              interpret=interpret)

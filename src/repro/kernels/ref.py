@@ -55,6 +55,37 @@ def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
 
 
+def _blocked(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    """(R, C) -> (R, nb, block) zero-padded view, plus nb."""
+    r, c = x.shape
+    nb = -(-c // block)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, nb * block - c)))
+    return xp.reshape(r, nb, block), nb
+
+
+def int8_ref(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-block max-scale int8 oracle: (q (R, C), scale (R, nb), roundtrip)."""
+    r, c = x.shape
+    xb, nb = _blocked(x, block)
+    scale = jnp.abs(xb).max(axis=-1) / 127.0                    # (R, nb)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(xb * inv[..., None]), -127, 127)
+    rt = (q * scale[..., None]).reshape(r, nb * block)[:, :c]
+    return q.astype(jnp.int8).reshape(r, nb * block)[:, :c], scale, rt
+
+
+def sign_ref(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    """1-bit sign oracle: (scale (R, nb) = mean|x| over real entries,
+    roundtrip (R, C) = +-scale by sign(x), zeros counted as +)."""
+    r, c = x.shape
+    xb, nb = _blocked(x, block)
+    counts = np.full((nb,), block, np.float32)
+    counts[-1] = c - (nb - 1) * block
+    scale = jnp.abs(xb).sum(axis=-1) / counts                   # (R, nb)
+    rt = jnp.where(xb >= 0, scale[..., None], -scale[..., None])
+    return scale, rt.reshape(r, nb * block)[:, :c]
+
+
 def rglru_ref(a: jax.Array, b: jax.Array,
               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
     """Sequential linear recurrence h_t = a_t h_{t-1} + b_t.

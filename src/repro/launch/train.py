@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import restore, save
+from repro.comms import Comms
 from repro.configs import get_config, reduced
 from repro.core import (HSGD, HierarchySpec, all_divergences, contiguous,
                         make_executor, make_topology, per_worker_grads)
@@ -64,6 +65,17 @@ def build_argparser():
                     help="aggregation payload dtype override (bfloat16 "
                          "halves sync bytes; alone it implies --aggregator "
                          "compressed)")
+    ap.add_argument("--comms", default=None,
+                    choices=["identity", "int8", "sign", "topk"],
+                    help="communication plan: fuse syncs into flat "
+                         "per-dtype buffers and ship them through this "
+                         "codec (repro.comms); adds per-level wire "
+                         "accounting to the telemetry.  Default: off "
+                         "(bitwise-identical leaf-wise path)")
+    ap.add_argument("--comms-block", type=int, default=0,
+                    help="codec block size override (int8/sign)")
+    ap.add_argument("--comms-rate", type=float, default=0.0,
+                    help="top-k sparsification rate override (topk)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -84,7 +96,15 @@ def make_spec(args) -> HierarchySpec:
 
 
 def main(argv=None):
-    args = build_argparser().parse_args(argv)
+    ap = build_argparser()
+    args = ap.parse_args(argv)
+    # fail loudly on codec knobs that would otherwise be silently ignored
+    if args.comms_block and args.comms not in ("int8", "sign"):
+        ap.error(f"--comms-block only applies to --comms int8|sign "
+                 f"(got --comms {args.comms})")
+    if args.comms_rate and args.comms != "topk":
+        ap.error(f"--comms-rate only applies to --comms topk "
+                 f"(got --comms {args.comms})")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -97,8 +117,20 @@ def main(argv=None):
     topo = make_topology(
         "uniform", spec=spec, sync_dtype=args.sync_dtype,
         aggregator=None if args.aggregator == "mean" else args.aggregator)
-    eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend))
+    comms = None
+    if args.comms:
+        kw = {}
+        if args.comms_block:
+            kw["block"] = args.comms_block
+        if args.comms_rate:
+            kw["rate"] = args.comms_rate
+        comms = Comms(args.comms, **kw)
+    eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend),
+               comms=comms)
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
+    if comms is not None:
+        # static per-level wire accounting: what each sync event moves
+        print(json.dumps({"wire": eng.wire_stats(state).summary(args.steps)}))
 
     stream = TokenStream(seed=args.seed, batch=args.batch, seq_len=args.seq,
                          vocab=cfg.vocab_size, n_workers=n)
@@ -108,8 +140,11 @@ def main(argv=None):
         try:
             start, tree = restore(args.ckpt_dir, {
                 "params": state.params, "opt": state.opt_state})
+            # codec residuals are not checkpointed: resume restarts error
+            # feedback from the fresh (zero) state
             state = eng.executor.place(state.__class__(
-                tree["params"], tree["opt"], jnp.asarray(start, jnp.int32)))
+                tree["params"], tree["opt"], jnp.asarray(start, jnp.int32),
+                state.comms))
             print(f"resumed from step {start}")
         except AssertionError:
             pass
@@ -152,8 +187,10 @@ def main(argv=None):
     for srec in reversed(step_hist):
         nxt = srec.setdefault("elapsed_s", nxt)
     history = []
+    wire_cum = 0
     for srec in step_hist:
         step = srec["t"]
+        wire_cum += srec.get("wire_bytes", 0)
         # record log-cadence steps, the final step, and every step that
         # carries divergence telemetry (its cadence may not align with
         # --log-every)
@@ -163,6 +200,8 @@ def main(argv=None):
                    "loss": srec["ce"],
                    "lvl": spec.sync_level(step - 1),
                    "elapsed_s": srec["elapsed_s"]}
+            if comms is not None:
+                rec["wire_cum_bytes"] = wire_cum
             if "divergence" in srec:
                 rec["divergence"] = srec["divergence"]
             history.append(rec)

@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) for every registered Compressor:
+round-trip error contracts and idempotence — re-encoding a decoded payload
+must be a fixed point (up to f32 rounding), which is what makes a codec a
+well-defined wire format rather than a one-shot perturbation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.comms import (IdentityCompressor, Int8Compressor, SignCompressor,
+                         TopKCompressor)
+from repro.comms.codecs import COMPRESSORS  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+# one representative instance per registered codec CLASS (registry names
+# alias: identity/none, int8/q8, sign/1bit); small blocks keep interpret
+# mode fast while exercising the padded-tail path
+INSTANCES = [IdentityCompressor(), Int8Compressor(block=32),
+             SignCompressor(block=32), TopKCompressor(rate=0.25)]
+
+
+def test_every_registered_codec_is_covered():
+    assert {type(c) for c in INSTANCES} == set(COMPRESSORS.values())
+
+
+def _payload(rows, length, seed, scale):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(rows, length)) * scale, jnp.float32)
+
+
+LENGTHS = st.sampled_from([1, 7, 31, 32, 33, 64, 100, 171, 256])
+
+
+@pytest.mark.parametrize("codec", INSTANCES, ids=lambda c: c.name)
+@given(rows=st.integers(1, 4), length=LENGTHS,
+       seed=st.integers(0, 10**6),
+       scale=st.floats(1e-3, 1e3))
+def test_roundtrip_and_idempotence(codec, rows, length, seed, scale):
+    x = _payload(rows, length, seed, scale)
+    once, res = codec.roundtrip(x)
+    assert once.shape == x.shape and res is None  # no residual threaded
+    twice, _ = codec.roundtrip(once)
+    # idempotence: the decoded payload is a fixed point of the codec
+    tol = 1e-5 * scale + 1e-6
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once),
+                               atol=tol, rtol=1e-5)
+
+
+@given(rows=st.integers(1, 3), length=LENGTHS,
+       seed=st.integers(0, 10**6))
+def test_identity_is_exact(rows, length, seed):
+    x = _payload(rows, length, seed, 1.0)
+    once, _ = IdentityCompressor().roundtrip(x)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(x))
+
+
+@given(rows=st.integers(1, 3), length=LENGTHS,
+       seed=st.integers(0, 10**6))
+def test_int8_blockwise_error_bound(rows, length, seed):
+    """|x - rt| <= half a quantization step of the block max."""
+    blk = 32
+    x = _payload(rows, length, seed, 1.0)
+    rt, _ = Int8Compressor(block=blk).roundtrip(x)
+    xn, rn = np.asarray(x), np.asarray(rt)
+    nb = -(-length // blk)
+    pad = np.zeros((rows, nb * blk - length), np.float32)
+    xb = np.concatenate([xn, pad], 1).reshape(rows, nb, blk)
+    rb = np.concatenate([rn, pad], 1).reshape(rows, nb, blk)
+    bound = np.abs(xb).max(-1, keepdims=True) / 127.0 * 0.5 + 1e-6
+    assert (np.abs(xb - rb) <= bound).all()
+
+
+@given(rows=st.integers(1, 3), length=LENGTHS,
+       seed=st.integers(0, 10**6))
+def test_sign_preserves_signs_and_scale(rows, length, seed):
+    blk = 32
+    x = _payload(rows, length, seed, 1.0)
+    rt, _ = SignCompressor(block=blk).roundtrip(x)
+    xn, rn = np.asarray(x), np.asarray(rt)
+    assert (np.sign(rn) == np.where(xn >= 0, 1.0, -1.0)).all()
+    # block magnitudes are mean |x| over REAL entries (padding excluded)
+    tail = xn[:, (length // blk) * blk:]
+    if tail.size:
+        np.testing.assert_allclose(np.abs(rn[:, -1]),
+                                   np.abs(tail).mean(1), rtol=1e-5)
+
+
+@given(rows=st.integers(1, 3),
+       length=st.sampled_from([4, 32, 33, 100, 171, 256]),
+       seed=st.integers(0, 10**6))
+def test_topk_keeps_largest_and_feeds_back_error(rows, length, seed):
+    rate = 0.25
+    codec = TopKCompressor(rate=rate)
+    x = _payload(rows, length, seed, 1.0)
+    k = codec._k(length)
+    rt, res = codec.roundtrip(x, jnp.zeros_like(x))
+    rn, xn = np.asarray(rt), np.asarray(x)
+    assert (np.count_nonzero(rn, axis=1) <= k).all()
+    kept = rn != 0
+    np.testing.assert_array_equal(rn[kept], xn[kept])  # values verbatim
+    # error feedback: residual is exactly what was dropped
+    np.testing.assert_allclose(np.asarray(res), xn - rn, atol=1e-7)
+    # and the kept entries dominate the dropped ones per row
+    for r in range(rows):
+        if kept[r].any() and (~kept[r]).any():
+            assert np.abs(xn[r][kept[r]]).min() >= \
+                np.abs(xn[r][~kept[r]]).max() - 1e-6

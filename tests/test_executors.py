@@ -205,6 +205,104 @@ def test_mesh_rejects_mask_and_mismatched_mesh(setup):
              executor=MeshExecutor(flat))
 
 
+@needs_devices
+def test_mesh_exact_weighted_gather(setup):
+    """gather_aggregate's docstring promise for the WEIGHTED rule: the fused
+    multiply+reduce reassociates, so exact mode agrees with sim to f32
+    rounding (not bitwise) — previously only mean/compressed/sign were
+    covered."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    w = np.arange(1, N + 1, dtype=float)
+    mk = lambda: make_topology("uniform", spec=spec,
+                               aggregator=WeightedAggregator(w))
+    st_sim, _ = trajectory(ds, model, mk(), "sim")
+    st_mesh, _ = trajectory(
+        ds, model, mk(),
+        MeshExecutor(make_host_mesh(group_sizes=gs), exact=True))
+    assert max_param_diff(st_sim.params, st_mesh.params) < 5e-6
+
+
+# ---------------------------------------------------------------------------
+# comms (FlatBucket + codecs) across executors
+# ---------------------------------------------------------------------------
+@needs_devices
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+def test_mesh_comms_identity_pmean(setup, spec_name):
+    """FlatBucket + identity codec through the production pmean lowering:
+    sim and mesh agree to f32 rounding, as without comms."""
+    from repro.comms import Comms
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS[spec_name]
+    mk = lambda: make_topology("uniform", spec=spec)
+    e = lambda ex: HSGD(model.loss, sgd(0.05), mk(), executor=ex,
+                        comms=Comms())
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    e1 = e("sim")
+    s1 = e1.init(jax.random.PRNGKey(0), model.init)
+    s1, h1 = e1.run_rounds(s1, bf, 12)
+    e2 = e(MeshExecutor(make_host_mesh(group_sizes=gs)))
+    s2 = e2.init(jax.random.PRNGKey(0), model.init)
+    s2, h2 = e2.run_rounds(s2, bf, 12)
+    assert max_param_diff(s1.params, s2.params) < 5e-6
+    assert [r["wire_bytes"] for r in h1] == [r["wire_bytes"] for r in h2]
+
+
+@needs_devices
+@pytest.mark.parametrize("comms", ["identity", "int8", "topk"])
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+def test_mesh_comms_exact_is_bitwise(setup, spec_name, comms):
+    """exact mode replays the sim bucket reduce per shard: bit-identical
+    trajectories AND bit-identical error-feedback residuals."""
+    from repro.comms import Comms
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS[spec_name]
+    mk = lambda: make_topology("uniform", spec=spec)
+    mkc = lambda: Comms("topk", rate=0.25) if comms == "topk" else \
+        Comms(comms)
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    e1 = HSGD(model.loss, sgd(0.05), mk(), comms=mkc())
+    s1 = e1.init(jax.random.PRNGKey(0), model.init)
+    s1, _ = e1.run_rounds(s1, bf, 12)
+    e2 = HSGD(model.loss, sgd(0.05), mk(), comms=mkc(),
+              executor=MeshExecutor(make_host_mesh(group_sizes=gs),
+                                    exact=True))
+    s2 = e2.init(jax.random.PRNGKey(0), model.init)
+    s2, _ = e2.run_rounds(s2, bf, 12)
+    assert max_param_diff(s1.params, s2.params) == 0.0
+    if comms == "topk":
+        assert max_param_diff(s1.comms, s2.comms) == 0.0
+
+
+@needs_devices
+def test_mesh_comms_fuses_collectives(setup):
+    """The lowered mesh round syncs O(dtypes) fused buffers, not O(leaves)
+    arrays: psum count in the jaxpr drops to 1 bucket + 1 metrics pmean
+    (the no-regression check is a jaxpr diff, not wall-clock)."""
+    from repro.comms import Comms
+    from repro.core.hsgd import Round
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    batches = tuple(bf(t) for t in range(4))
+    counts = {}
+    for comms in (None, Comms()):
+        eng = HSGD(model.loss, sgd(0.05),
+                   make_topology("uniform", spec=spec), comms=comms,
+                   executor=MeshExecutor(make_host_mesh(group_sizes=gs)))
+        st = eng.init(jax.random.PRNGKey(0), model.init)
+        rf = eng.executor._build_round(Round(4, SyncEvent(level=1)))
+        jaxpr = str(jax.make_jaxpr(rf)(st, batches))
+        counts[comms is None] = jaxpr.count("psum")
+    n_leaves = len(jax.tree.leaves(model.init(jax.random.PRNGKey(0))))
+    assert counts[True] == n_leaves + 1   # leaf-wise syncs + metrics pmean
+    assert counts[False] == 1 + 1         # one f32 bucket + metrics pmean
+
+
 # ---------------------------------------------------------------------------
 # subprocess: the equivalence suite on a forced 8-device host platform, so
 # plain single-device `pytest -q` runs still exercise the mesh backend
@@ -213,6 +311,7 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
+from repro.comms import Comms
 from repro.core import HSGD, HierarchySpec, MeshExecutor, make_topology
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
@@ -230,8 +329,8 @@ def diff(a, b):
     return max(jax.tree.leaves(jax.tree.map(
         lambda p, q: float(jnp.abs(p - q).max()), a, b)))
 
-def run(topo, executor):
-    eng = HSGD(model.loss, sgd(0.05), topo, executor=executor)
+def run(topo, executor, comms=None):
+    eng = HSGD(model.loss, sgd(0.05), topo, executor=executor, comms=comms)
     st = eng.init(jax.random.PRNGKey(0), model.init)
     st, _ = eng.run_rounds(st, batch_fn, 10)
     return st
@@ -247,6 +346,13 @@ for gs, periods in [((2, 4), (8, 4)), ((2, 2, 2), (8, 4, 2))]:
     d_exact = diff(s_sim.params, s_exact.params)
     assert d_pmean < 5e-6, (gs, d_pmean)
     assert d_exact == 0.0, (gs, d_exact)
+    # comms: FlatBucket + int8 codec, exact lowering replays the sim bucket
+    # reduce per shard -> bitwise
+    s_csim = run(mk(), "sim", comms=Comms("int8"))
+    s_cexact = run(mk(), MeshExecutor(make_host_mesh(group_sizes=gs),
+                                      exact=True), comms=Comms("int8"))
+    d_comms = diff(s_csim.params, s_cexact.params)
+    assert d_comms == 0.0, (gs, d_comms)
 print("MESH_EQUIV_OK")
 """
 

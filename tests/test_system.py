@@ -106,6 +106,9 @@ def test_multilevel_driver_smoke():
     from repro.launch.train import main
     hist = main(["--arch", "mamba2-130m", "--reduced",
                  "--levels", "2,2,2:8,4,2", "--steps", "8", "--batch", "2",
-                 "--seq", "16", "--log-every", "8"])
+                 "--seq", "16", "--log-every", "8", "--comms", "int8"])
     assert hist[-1]["step"] == 8
     assert np.isfinite(hist[-1]["loss"])
+    # comms on: cumulative wire accounting rides the telemetry records, and
+    # 8 steps of (8,4,2) hit L3 twice, L2 once, L1 once
+    assert hist[-1]["wire_cum_bytes"] > 0

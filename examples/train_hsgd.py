@@ -1,9 +1,20 @@
 """End-to-end driver example: H-SGD-train a reduced qwen2-family LM on the
-synthetic token stream, with checkpointing and divergence telemetry.
+synthetic token stream, with checkpointing, divergence telemetry, and the
+simulated-time heterogeneity engine.
 
     PYTHONPATH=src python examples/train_hsgd.py
 
 (The full-size run is the same command without --reduced on a TPU fleet.)
+
+The --runtime/--straggler/--deadline flags price the schedule in simulated
+seconds: every worker's clock advances per local step (here with
+heavy-tailed lognormal jitter), sync events barrier within their subtree
+and cost latency + payload-bytes/bandwidth per tier crossed (the int8 comms
+codec shrinks the payload, visibly buying time), and workers that miss a
+sync's deadline are dropped from that event only — keeping their exact
+params and comms residuals.  Telemetry records gain sim_time_s /
+sim_sync_s, and the run ends with a runtime breakdown plus planner
+constants fitted from the trace (CommModel.fit_from_trace).
 """
 from repro.launch.train import main
 
@@ -13,6 +24,10 @@ if __name__ == "__main__":
         "--workers", "8", "--groups", "2", "--G", "8", "--I", "2",
         "--steps", "120", "--batch", "4", "--seq", "64",
         "--lr", "3e-3", "--optimizer", "momentum",
+        "--comms", "int8",
+        "--runtime", "0.004,0.005:1e9,0.0003:1e10",
+        "--straggler", "lognormal:0.8",
+        "--deadline", "0.004",
         "--log-every", "10", "--divergence-every", "40",
         "--ckpt-dir", "/tmp/hsgd_ckpt", "--ckpt-every", "60",
         "--out", "/tmp/hsgd_history.json",

@@ -45,7 +45,7 @@ class Executor(abc.ABC):
     def __init__(self):
         self.plan = None
         self._step_fns: Dict[Any, Any] = {}
-        self._round_fns: Dict[Round, Any] = {}
+        self._round_fns: Dict[Any, Any] = {}
 
     # -- lifecycle ----------------------------------------------------------
     def bind(self, plan) -> "Executor":
@@ -71,17 +71,18 @@ class Executor(abc.ABC):
             self._step_fns[key] = self._build_step(event, masked)
         return self._step_fns[key]
 
-    def round_fn(self, rnd: Round):
-        if rnd not in self._round_fns:
-            self._round_fns[rnd] = self._build_round(rnd)
-        return self._round_fns[rnd]
+    def round_fn(self, rnd: Round, masked: bool = False):
+        key = (rnd, masked)
+        if key not in self._round_fns:
+            self._round_fns[key] = self._build_round(rnd, masked)
+        return self._round_fns[key]
 
     @abc.abstractmethod
     def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
         ...
 
     @abc.abstractmethod
-    def _build_round(self, rnd: Round):
+    def _build_round(self, rnd: Round, masked: bool = False):
         ...
 
 
@@ -138,12 +139,26 @@ class SimExecutor(Executor):
     on the O(dtypes) buffers — the aggregator rule is applied unchanged."""
 
     def _apply_event(self, params, opt_state, cstate, event: SyncEvent,
-                     mask=None):
+                     mask=None, drop: bool = False):
+        """``mask`` weights the aggregation over participating workers only.
+        ``drop=False`` is the classic runtime-mask semantics: masked-out
+        workers still RECEIVE the aggregate (Algorithm 1 — they are present,
+        they just contributed nothing).  ``drop=True`` is the elastic-
+        deadline semantics: masked-out workers neither contribute nor
+        receive — they were still computing when the barrier closed, so they
+        keep their exact post-update params, opt state and unconsumed comms
+        residuals (the elastic-participation contract; tested)."""
         plan = self.plan
         reduce_fn = lambda tree: plan.topology.aggregate(tree, event,
                                                          mask=mask)
         new_p, new_o, new_c = _apply_sync(plan, reduce_fn, params, opt_state,
                                           cstate)
+        if drop:
+            keep = jnp.asarray(mask).astype(bool)
+            new_p = _keep_rows(keep, new_p, params)
+            new_o = _keep_rows(keep, new_o, opt_state)
+            if cstate is not None:
+                new_c = _keep_rows(keep, new_c, cstate)
         if plan.comms is not None:
             # topology.aggregate keeps non-participants' rows untouched, but
             # the comms path hands it codec-roundtripped payloads — restore
@@ -189,15 +204,26 @@ class SimExecutor(Executor):
         return jax.jit(step, donate_argnums=0) if masked else \
             jax.jit(lambda s, b: step(s, b), donate_argnums=0)
 
-    def _build_round(self, rnd: Round):
+    def _build_round(self, rnd: Round, masked: bool = False):
         """One jitted function for '``n_local`` local steps then sync': the
         local block is a single ``lax.scan`` over the stacked batches, so the
         whole round is ONE dispatch + ONE jit-cache hit instead of
-        ``n_local`` of each."""
+        ``n_local`` of each.
+
+        ``masked=True`` builds the elastic-drop variant ``(state, batches,
+        mask) -> ...``: EVERY worker still runs the local block (a dropped
+        worker was computing, not absent), but the round-ending sync runs
+        with ``drop`` semantics — workers masked out neither contribute to
+        nor receive the aggregate (see :meth:`_apply_event`).  One compiled
+        function per Round serves every mask value (the mask is a traced
+        argument)."""
         local_update = self.plan.local_update_fn()
         vupdate = jax.vmap(local_update)
+        if masked:
+            assert rnd.event is not None, \
+                "a masked round needs a sync event to drop workers from"
 
-        def round_fn(state: HSGDState, batches):
+        def round_fn(state: HSGDState, batches, mask=None):
             """batches: a length-``n_local`` tuple of per-step batches."""
             stacked = _stack_batches(rnd.n_local, batches)
 
@@ -212,14 +238,17 @@ class SimExecutor(Executor):
             cstate = state.comms
             if rnd.event is not None:
                 params, opt_state, cstate = self._apply_event(
-                    params, opt_state, cstate, rnd.event)
+                    params, opt_state, cstate, rnd.event,
+                    mask=mask, drop=masked)
             state = HSGDState(params, opt_state, state.step + rnd.n_local,
                               cstate)
             return state, metrics  # metrics stacked (n_local,) per entry
 
         if not self.plan._jit:
             return round_fn
-        return jax.jit(round_fn, donate_argnums=0)
+        if masked:
+            return jax.jit(round_fn, donate_argnums=0)
+        return jax.jit(lambda s, b: round_fn(s, b), donate_argnums=0)
 
 
 # ---------------------------------------------------------------------------
@@ -257,9 +286,18 @@ class MeshExecutor(Executor):
         topo = self.plan.topology
         spec = getattr(topo, "spec", None)
         if spec is None:
-            raise TypeError(
-                f"mesh backend needs a uniform hierarchy to map levels onto "
-                f"mesh axes; got {type(topo).__name__} (use the sim backend)")
+            raise NotImplementedError(
+                f"MeshExecutor needs a uniform hierarchy to map levels onto "
+                f"named mesh axes; {type(topo).__name__} has none — run "
+                f"this topology on the simulator: HSGD(..., executor='sim')")
+        rt = getattr(self.plan, "runtime", None)
+        if rt is not None and rt.elastic:
+            raise NotImplementedError(
+                "MeshExecutor does not lower elastic participation: a "
+                "deadline drop becomes a runtime mask, and masks are a "
+                "sim-only feature — run elastic policies on the simulator "
+                "(HSGD(..., executor='sim')) or use a full-barrier runtime "
+                "(RuntimeModel(policy=None)), which is pure accounting")
         if self.mesh is None:
             self.mesh = make_hsgd_mesh(spec.group_sizes)
         self.rep_axes = replica_axes(self.mesh)
@@ -357,7 +395,7 @@ class MeshExecutor(Executor):
             raise NotImplementedError(
                 "runtime participation masks are not lowered by the mesh "
                 "backend; use executor='sim' for partial participation")
-        core = self._round_core(event)
+        core = self._round_core(event)  # fails fast, before any shard_map
 
         def step(state: HSGDState, batch):
             params, opt_state, cstate, metrics = core(
@@ -371,7 +409,11 @@ class MeshExecutor(Executor):
             return step
         return jax.jit(step, donate_argnums=0)
 
-    def _build_round(self, rnd: Round):
+    def _build_round(self, rnd: Round, masked: bool = False):
+        if masked:
+            raise NotImplementedError(
+                "runtime participation masks are not lowered by the mesh "
+                "backend; use executor='sim' for partial participation")
         core = self._round_core(rnd.event)
 
         def round_fn(state: HSGDState, batches):

@@ -95,12 +95,22 @@ class HSGD:
     payloads + that wire codec, and turns on per-level wire accounting
     (:meth:`wire_stats`; :meth:`run_rounds` history records additionally
     carry ``wire_bytes`` — the per-step :meth:`step` path does not).
+
+    ``runtime`` selects the simulated-time model
+    (:func:`repro.runtime.make_runtime`): None (default) is bitwise-identical
+    to no runtime at all; a :class:`~repro.runtime.RuntimeModel` threads an
+    event-driven :class:`~repro.runtime.SimClock` through :meth:`run_rounds`
+    (per-worker straggler clocks, per-level link costs priced by the comms
+    payload bytes), adds ``sim_time_s``/``sim_sync_s`` to every history
+    record, and — with an elastic policy — converts missed sync deadlines
+    into runtime-mask drops (sim executor only; the per-step :meth:`step`
+    path ignores the runtime, pass masks there yourself).
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
                  topology: Topology, *, aggregate_opt_state: bool = True,
                  jit: bool = True, accum_steps: int = 1, executor=None,
-                 comms=None):
+                 comms=None, runtime=None):
         """accum_steps > 1: each H-SGD iteration accumulates gradients over
         that many microbatches (scan) before the single optimizer update —
         same semantics as one large-batch step (SGD is linear in the
@@ -112,9 +122,12 @@ class HSGD:
         self._jit = jit
         self.accum_steps = accum_steps
         # local imports: executors imports this module for HSGDState/Round,
-        # and comms reaches back into core.topology
+        # and comms/runtime reach back into core.topology
         from repro.comms import make_comms
         self.comms = make_comms(comms)
+        from repro.runtime import make_runtime
+        self.runtime = make_runtime(runtime)
+        self._last_clock = None
         from repro.core.executors import make_executor
         self.executor = make_executor(executor)
         self.executor.bind(self)
@@ -174,9 +187,13 @@ class HSGD:
         """The executor's compiled function for one '``event`` step'."""
         return self.executor.step_fn(event, masked)
 
-    def round_fn(self, rnd: Round):
-        """The executor's compiled function for one round."""
-        return self.executor.round_fn(rnd)
+    def round_fn(self, rnd: Round, masked: bool = False):
+        """The executor's compiled function for one round; ``masked=True``
+        builds the elastic-drop variant (every worker still runs its local
+        updates; workers masked out of the round's sync neither contribute
+        to nor receive the aggregate — they were still computing when the
+        barrier closed)."""
+        return self.executor.round_fn(rnd, masked)
 
     def step(self, state: HSGDState, batch,
              mask=None) -> Tuple[HSGDState, Dict]:
@@ -210,7 +227,16 @@ class HSGD:
 
         With comms enabled, every record additionally carries ``wire_bytes``
         — the bytes the step's sync event moved (0 between syncs), computed
-        statically from the payload specs (no device work)."""
+        statically from the payload specs (no device work).
+
+        With a runtime model bound, every record additionally carries
+        ``sim_time_s`` (the cumulative simulated makespan — the slowest
+        worker's clock after that step, barrier included) and ``sim_sync_s``
+        (cumulative per-level barrier link seconds, ``{"L1": ..., ...}``) —
+        all host-side numpy next to the static ``wire_bytes``.  An elastic
+        policy's deadline drops route the affected rounds through the
+        masked executor variant; :meth:`runtime_report` has the final
+        breakdown."""
         t0 = int(state.step)
         cut = eval_every if (eval_fn is not None and eval_every) else 0
         schedule = self.topology.schedule(t0 + T)[t0:]
@@ -219,12 +245,31 @@ class HSGD:
         if self.comms is not None:
             ws = self.wire_stats(state)
             wire = [ws.bytes_for_event(ev) for ev in schedule]
+        clock = None
+        sim: List[Tuple[float, Dict[str, float]]] = []  # per-step snapshots
+        if self.runtime is not None:
+            clock = self.runtime.clock(self.topology,
+                                       self._payload_nbytes(state))
+            self._last_clock = clock
         raw: List[Tuple[int, int, Dict]] = []  # (t_end, n_local, metrics)
         evals: Dict[int, Dict] = {}
         t = t0
         for rnd in rounds:
             batches = tuple(batch_fn(t + i) for i in range(rnd.n_local))
-            state, metrics = self.round_fn(rnd)(state, batches)
+            mask = None
+            if clock is not None:
+                for i in range(rnd.n_local):
+                    clock.advance(t + i)
+                    sim.append((clock.time_s, clock.level_seconds()))
+                if rnd.event is not None:
+                    mask = clock.sync(rnd.event)
+                    # the sync belongs to the round's last step
+                    sim[-1] = (clock.time_s, clock.level_seconds())
+            if mask is None:
+                state, metrics = self.round_fn(rnd)(state, batches)
+            else:
+                state, metrics = self.round_fn(rnd, masked=True)(
+                    state, batches, jnp.asarray(mask))
             t += rnd.n_local
             raw.append((t, rnd.n_local, metrics))
             if eval_fn is not None and eval_every and \
@@ -241,6 +286,10 @@ class HSGD:
                        **{k: float(v[i]) for k, v in metrics.items()}}
                 if wire is not None:
                     rec["wire_bytes"] = wire[step_no - t0 - 1]
+                if clock is not None:
+                    time_s, sync_s = sim[step_no - t0 - 1]
+                    rec["sim_time_s"] = round(time_s, 6)
+                    rec["sim_sync_s"] = sync_s
                 rec.update(evals.get(step_no, {}))
                 history.append(rec)
         return state, history
@@ -267,6 +316,28 @@ class HSGD:
                         for a in arrays]
             n_elements += n
         return WireStats(self.topology, tuple(payload), n_elements)
+
+    def _payload_nbytes(self, state: HSGDState) -> int:
+        """Per-worker bytes ONE sync payload puts on the wire — the encoded
+        codec payload with comms on (so compression buys simulated time),
+        else the raw dtype-true bytes of everything a sync ships (params +
+        aggregated optimizer moments)."""
+        if self.comms is not None:
+            return self.wire_stats(state).payload_bytes
+        parts = [state.params]
+        if self.aggregate_opt_state:
+            parts.append(_moments_only(state.opt_state))
+        return sum(x.nbytes // x.shape[0]
+                   for tree in parts for x in jax.tree.leaves(tree))
+
+    def runtime_report(self, state: Optional[HSGDState] = None):
+        """The last :meth:`run_rounds` clock's breakdown (simulated makespan,
+        per-level sync seconds, drop counts, ...), or None before any
+        runtime-enabled run.  ``state`` is accepted for symmetry with
+        :meth:`wire_stats` and unused."""
+        if self._last_clock is None:
+            return None
+        return self._last_clock.breakdown()
 
     def mean_params(self, state: HSGDState):
         """w̄^t (the analysis object; observable only at t = aG)."""

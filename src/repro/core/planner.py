@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import theory
 
@@ -31,6 +31,47 @@ class CommModel:
         n_loc = T // I - n_glob   # local rounds subsumed by global ones
         return T * self.compute_s + n_loc * self.local_round_s \
             + n_glob * self.global_round_s
+
+    @classmethod
+    def fit_from_trace(cls, history: Sequence[Dict],
+                       topology) -> "CommModel":
+        """Least-squares fit of the three constants from a simulated (or
+        measured) run: ``history`` is :meth:`repro.core.HSGD.run_rounds`
+        output whose records carry ``sim_time_s`` (any trace with ``t`` +
+        cumulative seconds works), ``topology`` the
+        :class:`~repro.core.topology.Topology` (or anything with
+        ``schedule(T)``) that produced it.  Each record contributes one
+        equation  ``time(t) ~= t*compute + n_loc(t)*local + n_glob(t)*
+        global``  with the event counts read off the schedule (levels >= 2
+        lumped as "local", level 1 as "global"); the solution is clipped at
+        zero.  This closes the loop runtime -> planner: simulate a regime
+        once, fit, then :func:`enumerate_plans` prices every (N, G, I)
+        under it."""
+        import numpy as np
+        recs = [r for r in history if "sim_time_s" in r]
+        assert recs, "no record carries sim_time_s — run with a runtime " \
+                     "model (HSGD(..., runtime=RuntimeModel(...)))"
+        T = max(int(r["t"]) for r in recs)
+        # the clock restarts at 0 on every run_rounds call, while record t
+        # is absolute — a resumed trace starts at t0 > 0, so regress steps
+        # and event counts RELATIVE to the trace's own start, not step 0
+        t0 = min(int(r["t"]) for r in recs) - 1
+        sched = topology.schedule(T)
+        # Topology.schedule yields SyncEvents, HierarchySpec.schedule ints
+        lvls = [ev if ev is None or isinstance(ev, int) else ev.level
+                for ev in sched]
+        n_loc = np.cumsum([l is not None and l >= 2 for l in lvls])
+        n_glob = np.cumsum([l == 1 for l in lvls])
+        loc0 = n_loc[t0 - 1] if t0 else 0
+        glob0 = n_glob[t0 - 1] if t0 else 0
+        A = np.array([[r["t"] - t0,
+                       n_loc[int(r["t"]) - 1] - loc0,
+                       n_glob[int(r["t"]) - 1] - glob0]
+                      for r in recs], float)
+        y = np.array([r["sim_time_s"] for r in recs], float)
+        coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+        c, lo, gl = (max(float(v), 0.0) for v in coef)
+        return cls(compute_s=c, local_round_s=lo, global_round_s=gl)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,9 +13,16 @@ worker axis on one device) or ``mesh`` (shard_map over a hierarchy-shaped
 device mesh — needs prod(level sizes) devices; sync events lower to
 named-axis all-reduces).
 
+``--runtime`` prices the schedule in simulated seconds (straggler clocks,
+per-level links, optional ``--deadline`` elastic participation —
+repro.runtime); telemetry then carries sim_time_s / sim_sync_s and the run
+ends with a runtime breakdown + planner constants fitted from the trace.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
-      --workers 8 --groups 2 --G 8 --I 2 --steps 60 --batch 4 --seq 64
+      --workers 8 --groups 2 --G 8 --I 2 --steps 60 --batch 4 --seq 64 \
+      --runtime 0.004,0.005:1e9,0.0003:1e10 --straggler lognormal:0.8 \
+      --deadline 0.004
 """
 from __future__ import annotations
 
@@ -76,6 +83,30 @@ def build_argparser():
                     help="codec block size override (int8/sign)")
     ap.add_argument("--comms-rate", type=float, default=0.0,
                     help="top-k sparsification rate override (topk)")
+    ap.add_argument("--runtime", default=None,
+                    help="simulated-time model 'COMPUTE[,LAT:BW,...]': "
+                         "seconds per local step, then one latency:bandwidth"
+                         " pair per hierarchy level outermost-first "
+                         "(default links: a 10x-per-tier datacenter ladder)."
+                         "  Adds sim_time_s / per-level sim_sync_s to the "
+                         "telemetry and a final runtime report; sync cost "
+                         "is priced from the comms payload bytes, so "
+                         "--comms codecs visibly buy simulated time.  "
+                         "Example: --runtime 0.004,0.005:1e9,0.0003:1e10")
+    ap.add_argument("--straggler", default=None,
+                    help="heterogeneity regime 'name[:params]': "
+                         "fixed[:frac:factor] | lognormal[:sigma] | "
+                         "bursty[:p_enter:p_exit:factor] (needs --runtime)")
+    ap.add_argument("--deadline", default=None,
+                    help="deadline-elastic participation: slack seconds "
+                         "('2.0') or per-level 'L1:2.0,L2:0.5' — workers "
+                         "missing a sync's deadline are dropped from that "
+                         "event only, keeping their params and comms "
+                         "residuals (needs --runtime; sim backend only)")
+    ap.add_argument("--runtime-seed", type=int, default=0,
+                    help="straggler sampler seed (draws are pure in "
+                         "(seed, step): policies compare on identical "
+                         "compute times)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -83,6 +114,27 @@ def build_argparser():
     ap.add_argument("--divergence-every", type=int, default=0)
     ap.add_argument("--out", default="")
     return ap
+
+
+def make_runtime_model(args, num_levels: int):
+    """--runtime 'COMPUTE[,LAT:BW,...]' (+ --straggler/--deadline/
+    --runtime-seed) -> RuntimeModel, or None with the flag unset."""
+    if not args.runtime:
+        return None
+    from repro.runtime import LinkModel, RuntimeModel
+    parts = [p for p in args.runtime.split(",") if p]
+    links = None
+    if len(parts) > 1:
+        if len(parts) - 1 != num_levels:
+            raise SystemExit(
+                f"--runtime: got {len(parts) - 1} LAT:BW pairs for a "
+                f"{num_levels}-level hierarchy (need one per level, "
+                f"outermost first)")
+        links = tuple(LinkModel(float(lat), float(bw))
+                      for lat, bw in (p.split(":") for p in parts[1:]))
+    return RuntimeModel(compute_s=float(parts[0]), links=links,
+                        straggler=args.straggler, policy=args.deadline,
+                        seed=args.runtime_seed)
 
 
 def make_spec(args) -> HierarchySpec:
@@ -105,6 +157,9 @@ def main(argv=None):
     if args.comms_rate and args.comms != "topk":
         ap.error(f"--comms-rate only applies to --comms topk "
                  f"(got --comms {args.comms})")
+    if (args.straggler or args.deadline) and not args.runtime:
+        ap.error("--straggler/--deadline need --runtime (the simulated "
+                 "clock they perturb)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -125,8 +180,9 @@ def main(argv=None):
         if args.comms_rate:
             kw["rate"] = args.comms_rate
         comms = Comms(args.comms, **kw)
+    runtime = make_runtime_model(args, spec.num_levels)
     eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend),
-               comms=comms)
+               comms=comms, runtime=runtime)
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
     if comms is not None:
         # static per-level wire accounting: what each sync event moves
@@ -202,10 +258,25 @@ def main(argv=None):
                    "elapsed_s": srec["elapsed_s"]}
             if comms is not None:
                 rec["wire_cum_bytes"] = wire_cum
+            if "sim_time_s" in srec:
+                rec["sim_time_s"] = srec["sim_time_s"]
+                rec["sim_sync_s"] = srec["sim_sync_s"]
             if "divergence" in srec:
                 rec["divergence"] = srec["divergence"]
             history.append(rec)
             print(json.dumps(rec))
+    if runtime is not None:
+        # where the simulated time went (makespan, waits, per-level links,
+        # drop counts) + the fitted planner constants, closing the loop
+        # simulate -> fit -> enumerate_plans
+        from repro.core import CommModel
+        fit = CommModel.fit_from_trace(step_hist, topo)
+        print(json.dumps({"runtime": eng.runtime_report(),
+                          "fitted_comm_model": {
+                              "compute_s": round(fit.compute_s, 9),
+                              "local_round_s": round(fit.local_round_s, 9),
+                              "global_round_s": round(fit.global_round_s, 9),
+                          }}))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(history, f, indent=1)

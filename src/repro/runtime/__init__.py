@@ -1,0 +1,37 @@
+"""repro.runtime — simulated-time heterogeneity for H-SGD schedules.
+
+Three parts (see the module docstrings for the design notes):
+
+* :mod:`repro.runtime.clock` — ``RuntimeModel`` / ``SimClock``: event-driven
+  per-worker clocks, per-level link models priced by the PR-3 wire
+  accounting (codecs visibly buy time), exact monotonicity and
+  elastic-never-slower invariants;
+* :mod:`repro.runtime.stragglers` — per-worker compute-multiplier samplers
+  (fixed slow set / lognormal / bursty Markov), pure in ``(seed, t)``;
+* :mod:`repro.runtime.elastic` — participation policies (``FullBarrier`` /
+  ``DeadlineElastic``) that convert missed deadlines into the engine's
+  runtime-mask contract.
+
+Enable on an engine with ``HSGD(..., runtime=RuntimeModel(...))``; the
+default ``runtime=None`` is bitwise-identical to the runtime-free engine.
+"""
+from repro.runtime.clock import (LinkModel, RuntimeLike, RuntimeModel,
+                                 SimClock, default_links, make_runtime)
+from repro.runtime.elastic import (DeadlineElastic, FullBarrier,
+                                   ParticipationPolicy, PolicyLike,
+                                   make_policy)
+from repro.runtime.stragglers import (STRAGGLERS, BurstyStraggler,
+                                      FixedSlowStraggler, LognormalStraggler,
+                                      NoStraggler, StragglerLike,
+                                      StragglerSampler, make_straggler,
+                                      register_straggler)
+
+__all__ = [
+    "RuntimeModel", "RuntimeLike", "make_runtime", "SimClock", "LinkModel",
+    "default_links",
+    "ParticipationPolicy", "FullBarrier", "DeadlineElastic", "PolicyLike",
+    "make_policy",
+    "StragglerSampler", "NoStraggler", "FixedSlowStraggler",
+    "LognormalStraggler", "BurstyStraggler", "STRAGGLERS", "StragglerLike",
+    "make_straggler", "register_straggler",
+]

@@ -1,0 +1,246 @@
+"""Event-driven simulated time for H-SGD schedules.
+
+The paper's whole argument is convergence per *wall-clock* cost — rare far
+rounds win because near rounds are cheap — but the repo priced time as three
+static constants (``planner.CommModel``).  This module simulates it:
+
+* every worker carries its own clock, advanced per local step by
+  ``compute_s`` x a :mod:`straggler <repro.runtime.stragglers>` multiplier;
+* every :class:`~repro.core.topology.SyncEvent` is a barrier within each
+  level-(ℓ-1) subtree, priced by per-level :class:`LinkModel`s —
+  ``latency_s + payload_bytes / bandwidth`` per tree tier crossed, with
+  ``payload_bytes`` the per-worker encoded payload from the PR-3 wire
+  accounting (:class:`repro.comms.WireStats`), so compression codecs
+  visibly buy simulated time;
+* the bound :mod:`participation policy <repro.runtime.elastic>` decides who
+  makes each barrier; drops become the engine's runtime-mask contract.
+
+Everything is host-side numpy — zero device work, zero effect on the jitted
+program (``HSGD(..., runtime=None)``, the default, is bitwise-identical to
+no runtime at all; with a runtime and the default full-barrier policy the
+*trajectory* is still bitwise-identical, only the accounting is added).
+
+Two exact invariants, by construction (and property-tested):
+
+1. **Monotone**: per-worker clocks never decrease (barriers only wait,
+   drops keep the dropped worker's own later arrival).
+2. **Elastic never slower**: with the same seed (so the same compute
+   draws — samplers are pure in ``(seed, t)``), every worker's clock under
+   ``DeadlineElastic`` is <= its clock under ``FullBarrier`` at every step:
+   admitted workers wait for a subset (max over fewer arrivals), dropped
+   workers keep an arrival that full-barrier would have raised past the
+   global max anyway.  Induction gives the pointwise bound; the CI
+   benchmark asserts it per straggler regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.runtime.elastic import (ParticipationPolicy, PolicyLike,
+                                   make_policy)
+from repro.runtime.stragglers import (StragglerLike, StragglerSampler,
+                                      make_straggler)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """One hierarchy tier's uplink: latency + bandwidth.  A sync payload
+    crossing this tier costs ``latency_s + nbytes / bandwidth_Bps``."""
+    latency_s: float
+    bandwidth_Bps: float = np.inf   # bytes/second
+
+    def __post_init__(self):
+        assert self.latency_s >= 0.0 and self.bandwidth_Bps > 0.0, self
+
+    def sync_s(self, nbytes: int) -> float:
+        return self.latency_s + float(nbytes) / self.bandwidth_Bps
+
+
+def default_links(num_levels: int) -> Tuple[LinkModel, ...]:
+    """A plausible datacenter-ish ladder: the outermost tier (level 1, the
+    cross-pod / WAN fabric) is slow, each deeper tier 10x faster — the
+    near-vs-far asymmetry the paper's Table E.1 measures."""
+    return tuple(LinkModel(latency_s=0.1 * 10.0 ** -(l - 1),
+                           bandwidth_Bps=1e8 * 10.0 ** (l - 1))
+                 for l in range(1, num_levels + 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeModel:
+    """The engine-facing bundle: ``HSGD(..., runtime=RuntimeModel(...))``.
+
+    compute_s:  nominal seconds per local update (scaled per worker/step by
+                the straggler sampler).
+    links:      one :class:`LinkModel` per hierarchy level, level 1 first
+                (None -> :func:`default_links` for the bound topology).
+    straggler:  sampler instance / registry spec ("fixed:0.25:4" ...) /
+                None (homogeneous).
+    policy:     participation policy / deadline spec ("2.0", "L1:2.0,L2:0.5",
+                a number) / None (full barrier).
+    seed:       sampler seed (pure counter-based draws — see stragglers.py).
+    """
+    compute_s: float = 1.0
+    links: Optional[Tuple[LinkModel, ...]] = None
+    straggler: StragglerLike = None
+    policy: PolicyLike = None
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.compute_s > 0.0, self
+
+    @property
+    def elastic(self) -> bool:
+        return make_policy(self.policy).elastic
+
+    def clock(self, topology, payload_bytes: int) -> "SimClock":
+        """Bind to a topology + per-worker payload size -> a fresh clock."""
+        return SimClock(self, topology, payload_bytes)
+
+
+RuntimeLike = Union[RuntimeModel, None]
+
+
+def make_runtime(spec: RuntimeLike = None, **kwargs) -> Optional[RuntimeModel]:
+    """Resolve the ``HSGD(..., runtime=...)`` argument (None = off, the
+    bitwise-identical default)."""
+    if spec is None and not kwargs:
+        return None
+    if isinstance(spec, RuntimeModel):
+        assert not kwargs, "kwargs only apply when constructing from scratch"
+        return spec
+    assert spec is None, f"runtime must be a RuntimeModel or None, got {spec!r}"
+    return RuntimeModel(**kwargs)
+
+
+class SimClock:
+    """Per-worker simulated clocks over one topology's schedule.
+
+    The engine drives it with ``advance(t)`` (one local update everywhere)
+    and ``sync(event)`` (one barrier; returns the (n,) participation mask,
+    or None when nobody was dropped).  ``time_s`` is the makespan (max over
+    worker clocks); ``comm_s`` attributes barrier link time per level
+    (parallel subtrees overlap, so each event counts its link cost once).
+    """
+
+    def __init__(self, model: RuntimeModel, topology, payload_bytes: int):
+        self.model = model
+        self.topology = topology
+        self.payload_bytes = int(payload_bytes)
+        self.n = topology.n
+        self.num_levels = len(topology.periods)
+        links = model.links if model.links is not None \
+            else default_links(self.num_levels)
+        assert len(links) == self.num_levels, \
+            f"need one LinkModel per hierarchy level ({self.num_levels}), " \
+            f"got {len(links)}"
+        self.links = tuple(links)
+        self.sampler: StragglerSampler = make_straggler(
+            model.straggler, self.n, model.seed)
+        self.policy: ParticipationPolicy = make_policy(model.policy)
+        # level-ℓ barrier groups = the level-(ℓ-1) subtrees
+        groupings = topology.level_groupings()
+        self._subtrees: Dict[int, List[np.ndarray]] = {
+            1: [np.arange(self.n)]}
+        for lvl, g in groupings.items():
+            self._subtrees[lvl + 1] = [g.members(i) for i in range(g.N)]
+        self.clocks = np.zeros(self.n)
+        self.compute_s = np.zeros(self.n)   # per-worker compute total
+        self.wait_s = np.zeros(self.n)      # per-worker barrier-wait total
+        self.comm_s = {l: 0.0 for l in range(1, self.num_levels + 1)}
+        self.n_dropped = {l: 0 for l in range(1, self.num_levels + 1)}
+        self.n_synced = {l: 0 for l in range(1, self.num_levels + 1)}
+        # per level: who made the most recent event, and when its (slowest
+        # participating) barrier completed — the "published model" telemetry:
+        # right after a level-1 sync, the admitted workers all hold the
+        # global aggregate, available at last_sync_time[1] regardless of
+        # where the dropped stragglers' clocks are
+        self.last_admitted: Dict[int, np.ndarray] = {}
+        self.last_sync_time: Dict[int, float] = {}
+
+    # -- time queries --------------------------------------------------------
+    @property
+    def time_s(self) -> float:
+        """Simulated makespan: the slowest worker's clock."""
+        return float(self.clocks.max())
+
+    def event_cost_s(self, level: int) -> float:
+        """Static link time of one level-``level`` sync: the payload crosses
+        every tree tier ``level..M`` on the way up (the PR-3 wire model's
+        cost structure, priced per tier)."""
+        return sum(self.links[j - 1].sync_s(self.payload_bytes)
+                   for j in range(level, self.num_levels + 1))
+
+    # -- the two engine hooks ------------------------------------------------
+    def advance(self, t: int) -> None:
+        """One local update of step ``t`` on every worker."""
+        dt = self.model.compute_s * self.sampler.multipliers(t)
+        self.clocks += dt
+        self.compute_s += dt
+
+    def sync(self, event) -> Optional[np.ndarray]:
+        """One barrier for ``event``.  Returns the (n,) bool participation
+        mask when the policy dropped someone, else None (everyone synced —
+        the engine runs its unmasked fast path)."""
+        part = self.topology.participants(event)
+        subtrees = self._subtrees.get(event.level)
+        if subtrees is None:
+            raise ValueError(
+                f"no barrier structure for level {event.level} on "
+                f"{type(self.topology).__name__} (levels: "
+                f"{sorted(self._subtrees)})")
+        cost = self.event_cost_s(event.level)
+        mask = np.ones(self.n, bool)
+        admitted_all = np.zeros(self.n, bool)
+        t_done = 0.0
+        dropped_any = False
+        for members in subtrees:
+            if part is not None:
+                members = members[part[members]]
+                if len(members) == 0:
+                    continue   # non-participating group: no barrier, no cost
+            arrivals = self.clocks[members]
+            made = self.policy.admit(event.level, arrivals)
+            assert made.any(), \
+                "policy admitted nobody (DeadlineElastic anchors on a " \
+                "subtree arrival quantile, so this cannot happen there)"
+            if not made.all():
+                dropped_any = True
+                mask[members[~made]] = False
+            admitted = members[made]
+            t_sync = arrivals[made].max() + cost
+            self.wait_s[admitted] += t_sync - cost - self.clocks[admitted]
+            self.clocks[admitted] = t_sync
+            admitted_all[admitted] = True
+            t_done = max(t_done, t_sync)
+            self.n_synced[event.level] += int(made.sum())
+            self.n_dropped[event.level] += int((~made).sum())
+        self.comm_s[event.level] += cost
+        self.last_admitted[event.level] = admitted_all
+        self.last_sync_time[event.level] = t_done
+        return mask if dropped_any else None
+
+    # -- reporting -----------------------------------------------------------
+    def level_seconds(self) -> Dict[str, float]:
+        """Cumulative per-level barrier link time (each event once — the
+        subtrees of one event run in parallel) — the history's
+        ``sim_sync_s`` breakdown."""
+        return {f"L{l}": round(s, 9) for l, s in self.comm_s.items()}
+
+    def breakdown(self) -> Dict:
+        """JSON-able accounting of where the simulated time went."""
+        return {
+            "time_s": round(self.time_s, 6),
+            "compute_s": {"max": round(float(self.compute_s.max()), 6),
+                          "mean": round(float(self.compute_s.mean()), 6)},
+            "wait_s": {"max": round(float(self.wait_s.max()), 6),
+                       "mean": round(float(self.wait_s.mean()), 6)},
+            "sync_s": self.level_seconds(),
+            "synced": dict(self.n_synced),
+            "dropped": dict(self.n_dropped),
+            "payload_bytes": self.payload_bytes,
+            "event_cost_s": {f"L{l}": round(self.event_cost_s(l), 9)
+                             for l in range(1, self.num_levels + 1)},
+        }

@@ -81,8 +81,25 @@ def test_hsgd_accepts_executor_spellings(setup):
 def test_mesh_rejects_grouped_topology(setup):
     ds, model = setup
     topo = GroupedTopology(contiguous(N, 2), G=8, I=4)
-    with pytest.raises(TypeError, match="uniform hierarchy"):
+    with pytest.raises(NotImplementedError, match="sim"):
         HSGD(model.loss, sgd(0.05), topo, executor="mesh")
+
+
+def test_mesh_rejects_elastic_runtime_at_construction(setup):
+    """An elastic policy becomes runtime masks, which the mesh backend cannot
+    lower — the refusal must fire at construction, not from inside
+    shard_map."""
+    from repro.runtime import RuntimeModel
+    ds, model = setup
+    mk = lambda: make_topology("two_level", n=N, N=2, G=8, I=4)
+    with pytest.raises(NotImplementedError, match="sim"):
+        HSGD(model.loss, sgd(0.05), mk(), executor="mesh",
+             runtime=RuntimeModel(compute_s=1.0, policy=2.0))
+    if len(jax.devices()) >= N:
+        # full-barrier runtime is pure host-side accounting: mesh accepts it
+        eng = HSGD(model.loss, sgd(0.05), mk(), executor="mesh",
+                   runtime=RuntimeModel(compute_s=1.0))
+        assert eng.runtime is not None and not eng.runtime.elastic
 
 
 def test_level_axes_mapping():

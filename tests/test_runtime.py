@@ -1,0 +1,409 @@
+"""The simulated-time runtime: straggler samplers, the event-driven clock,
+deadline-elastic participation, and their integration contracts —
+
+* ``HSGD(..., runtime=None)`` (the default) is bitwise-identical: same
+  trajectory AND the same lowered jaxpr as a runtime-full-barrier engine
+  (the clock is host-side accounting, invisible to XLA);
+* the elastic-participation contract: a worker dropped from a sync keeps
+  its EXACT post-update params, opt state and unconsumed comms residuals
+  (extends the PR-3 partial-participation tests in test_comms.py);
+* determinism: clocks are seed-reproducible and monotone, and sampler
+  draws are pure in (seed, t) so policies compare on identical compute
+  times — the basis of the elastic-never-slower invariant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import Comms
+from repro.core import (HSGD, CommModel, GroupedTopology, HierarchySpec,
+                        Round, contiguous, make_topology)
+from repro.core.topology import SyncEvent
+from repro.data import (FederatedDataset, label_shard_partition,
+                        make_classification)
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import momentum, sgd
+from repro.runtime import (DeadlineElastic, FullBarrier, LinkModel,
+                           RuntimeModel, make_policy, make_runtime,
+                           make_straggler)
+
+SPEC = HierarchySpec((2, 4), (8, 2))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = make_classification(0, num_classes=8, dim=16, per_class=40)
+    parts = label_shard_partition(y, [[j] for j in range(8)])
+    ds = FederatedDataset(x, y, parts)
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=24,
+                                     num_classes=8))
+    return ds, model
+
+
+def batch_fn(ds, bs=8):
+    return lambda t: jax.tree.map(jnp.asarray, ds.batch(t, bs))
+
+
+def max_diff(a, b):
+    d = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)
+    return max(jax.tree.leaves(d))
+
+
+# ---------------------------------------------------------------------------
+# straggler samplers
+# ---------------------------------------------------------------------------
+def test_samplers_deterministic_and_order_free():
+    for spec in ("none", "fixed:0.25:4", "lognormal:0.7",
+                 "bursty:0.1:0.3:5"):
+        a = make_straggler(spec, n=8, seed=3)
+        b = make_straggler(spec, n=8, seed=3)
+        # query b out of order: draws must be pure in (seed, t)
+        out_b = {t: b.multipliers(t) for t in (5, 0, 3, 1, 4, 2)}
+        for t in range(6):
+            np.testing.assert_array_equal(a.multipliers(t), out_b[t])
+        assert (a.multipliers(0) > 0).all()
+    # different seeds differ (for regimes with randomness)
+    a = make_straggler("lognormal:0.7", n=8, seed=0)
+    b = make_straggler("lognormal:0.7", n=8, seed=1)
+    assert not np.array_equal(a.multipliers(0), b.multipliers(0))
+
+
+def test_sampler_specs_and_registry():
+    s = make_straggler("fixed:0.5:3", n=8, seed=0)
+    assert s.slow_set.sum() == 4 and set(np.unique(s.multipliers(7))) == {1.0, 3.0}
+    assert make_straggler(None, n=4).multipliers(0).tolist() == [1.0] * 4
+    # rebinding an instance re-seeds it (RuntimeModel carries a template)
+    s2 = make_straggler(s, n=6, seed=9)
+    assert s2.n == 6 and s2.params() == s.params()
+    with pytest.raises(KeyError):
+        make_straggler("nope", n=4)
+    with pytest.raises(ValueError):
+        make_straggler("lognormal:1:2:3:4", n=4)
+
+
+def test_bursty_chain_is_markov_and_reproducible():
+    s = make_straggler("bursty:0.5:0.5:7", n=64, seed=2)
+    states = [(s.multipliers(t) > 1).mean() for t in range(40)]
+    assert 0.2 < np.mean(states[10:]) < 0.8  # mixes to the 50% stationary
+    s2 = make_straggler("bursty:0.5:0.5:7", n=64, seed=2)
+    np.testing.assert_array_equal(s.multipliers(39), s2.multipliers(39))
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+def test_make_policy_parsing():
+    assert isinstance(make_policy(None), FullBarrier)
+    assert isinstance(make_policy("full"), FullBarrier)
+    p = make_policy(2.0)
+    assert isinstance(p, DeadlineElastic) and p.deadline(1) == 2.0
+    p = make_policy("L1:2.0,L2:0.5")
+    assert p.deadline(1) == 2.0 and p.deadline(2) == 0.5
+    assert p.deadline(3) == np.inf  # unspecified level: full barrier there
+    with pytest.raises(ValueError):
+        make_policy("L1:")
+    # admit: anchored on the fastest member, so never empty
+    arr = np.array([1.0, 1.4, 9.0])
+    assert make_policy(0.5).admit(1, arr).tolist() == [True, True, False]
+    assert make_policy(None).admit(1, arr).all()
+
+
+# ---------------------------------------------------------------------------
+# the clock
+# ---------------------------------------------------------------------------
+def _drive(clock, topo, T):
+    times = []
+    for t in range(T):
+        clock.advance(t)
+        ev = topo.event_at(t)
+        if ev is not None:
+            clock.sync(ev)
+        times.append(clock.time_s)
+    return times
+
+
+def test_clock_monotone_and_seed_reproducible():
+    topo = make_topology("uniform", spec=SPEC)
+    rt = RuntimeModel(compute_s=1.0, straggler="lognormal:0.8", policy=0.5,
+                      seed=5)
+    t1 = _drive(rt.clock(topo, 1000), topo, 32)
+    t2 = _drive(rt.clock(topo, 1000), topo, 32)
+    assert t1 == t2                                    # seed-reproducible
+    assert all(a <= b for a, b in zip(t1, t1[1:]))     # monotone
+    assert t1[-1] > 0.0
+    ck = rt.clock(topo, 1000)
+    prev = ck.clocks.copy()
+    for t in range(32):
+        ck.advance(t)
+        assert (ck.clocks >= prev - 1e-12).all()
+        prev = ck.clocks.copy()
+        ev = topo.event_at(t)
+        if ev is not None:
+            ck.sync(ev)
+            assert (ck.clocks >= prev - 1e-12).all()   # barriers only wait
+            prev = ck.clocks.copy()
+
+
+def test_clock_elastic_never_slower_pointwise():
+    topo = make_topology("uniform", spec=SPEC)
+    for regime in ("none", "fixed:0.25:6", "lognormal:0.9",
+                   "bursty:0.1:0.3:8"):
+        full = RuntimeModel(compute_s=1.0, straggler=regime, seed=7)
+        el = RuntimeModel(compute_s=1.0, straggler=regime, policy=1.0, seed=7)
+        cf, ce = full.clock(topo, 4096), el.clock(topo, 4096)
+        for t in range(64):
+            cf.advance(t), ce.advance(t)
+            ev = topo.event_at(t)
+            if ev is not None:
+                cf.sync(ev), ce.sync(ev)
+            assert (ce.clocks <= cf.clocks + 1e-9).all(), (regime, t)
+
+
+def test_clock_link_pricing_and_codec_payoff():
+    """Sync cost = sum over crossed tiers of latency + bytes/bandwidth —
+    so a smaller (compressed) payload buys simulated time."""
+    topo = make_topology("uniform", spec=SPEC)
+    links = (LinkModel(1.0, 1e3), LinkModel(0.1, 1e4))
+    rt = RuntimeModel(compute_s=1.0, links=links)
+    big = rt.clock(topo, 10_000)
+    small = rt.clock(topo, 1_000)
+    assert big.event_cost_s(1) == pytest.approx(1.0 + 10_000 / 1e3 +
+                                                0.1 + 10_000 / 1e4)
+    assert big.event_cost_s(2) == pytest.approx(0.1 + 10_000 / 1e4)
+    t_big = _drive(big, topo, 16)[-1]
+    t_small = _drive(small, topo, 16)[-1]
+    assert t_small < t_big
+    # the homogeneous full-barrier closed form: T*compute + sum of costs
+    assert t_big == pytest.approx(16 * 1.0 + 2 * big.event_cost_s(1) +
+                                  6 * big.event_cost_s(2))
+    with pytest.raises(AssertionError):  # one link per level, enforced
+        RuntimeModel(compute_s=1.0, links=(LinkModel(1.0, 1e3),)).clock(
+            topo, 1)
+
+
+def test_clock_grouped_topology_partial_events():
+    """GroupedTopology with heterogeneous periods: a partial level-2 event
+    barriers only the participating groups — the others' clocks are
+    untouched and the event still prices one link crossing."""
+    topo = GroupedTopology(contiguous(8, 2), G=8, I=(2, 4))
+    rt = RuntimeModel(compute_s=1.0, links=(LinkModel(1.0, 1e9),
+                                            LinkModel(0.1, 1e9)))
+    ck = rt.clock(topo, 100)
+    ck.advance(0), ck.advance(1)
+    ev = topo.event_at(1)            # only group 0 (I=2) syncs
+    assert ev.groups == (True, False)
+    before = ck.clocks.copy()
+    assert ck.sync(ev) is None       # nobody dropped
+    assert (ck.clocks[:4] > before[:4]).all()        # group 0 paid the link
+    np.testing.assert_array_equal(ck.clocks[4:], before[4:])  # group 1 idle
+    assert ck.comm_s[2] > 0.0 and ck.comm_s[1] == 0.0
+
+
+def test_clock_published_model_telemetry():
+    """last_admitted / last_sync_time: who made the most recent level-ℓ
+    event and when its barrier completed — under elastic drops, the global
+    aggregate is published when the ADMITTED workers' barrier closes, well
+    before a dropped straggler's own clock gets there."""
+    topo = make_topology("uniform", spec=SPEC)
+    rt_e = RuntimeModel(compute_s=1.0, straggler="fixed:0.125:8", policy=1.0,
+                        seed=0)
+    rt_f = RuntimeModel(compute_s=1.0, straggler="fixed:0.125:8", seed=0)
+    ce, cf = rt_e.clock(topo, 1000), rt_f.clock(topo, 1000)
+    _drive(ce, topo, 8), _drive(cf, topo, 8)
+    slow = make_straggler("fixed:0.125:8", n=8, seed=0).slow_set
+    assert not ce.last_admitted[1][slow].any()
+    assert ce.last_admitted[1].sum() == 7
+    assert cf.last_admitted[1].all()
+    # publication beats the straggler-gated makespan; full barrier can't
+    assert ce.last_sync_time[1] < ce.time_s
+    assert cf.last_sync_time[1] == pytest.approx(cf.time_s)
+    assert ce.last_sync_time[1] < cf.last_sync_time[1]
+
+
+def test_make_runtime_resolution():
+    assert make_runtime(None) is None
+    rt = RuntimeModel(compute_s=2.0)
+    assert make_runtime(rt) is rt
+    assert make_runtime(compute_s=3.0).compute_s == 3.0
+    assert not RuntimeModel(compute_s=1.0).elastic
+    assert RuntimeModel(compute_s=1.0, policy=1.0).elastic
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+def test_runtime_none_is_bitwise_and_jaxpr_identical(setup):
+    """The acceptance contract: runtime=None (default) and a full-barrier
+    runtime produce the SAME trajectory and the SAME lowered round jaxpr —
+    the clock is host-side accounting, invisible to the compiled program."""
+    ds, model = setup
+    mk = lambda: make_topology("uniform", spec=SPEC)
+    e0 = HSGD(model.loss, sgd(0.05), mk())
+    e1 = HSGD(model.loss, sgd(0.05), mk(),
+              runtime=RuntimeModel(compute_s=1.0))
+    s0 = e0.init(jax.random.PRNGKey(0), model.init)
+    s1 = e1.init(jax.random.PRNGKey(0), model.init)
+    rnd = Round(2, SyncEvent(level=1))
+    batches = tuple(batch_fn(ds)(t) for t in range(2))
+    j0 = e0.round_fn(rnd).lower(s0, batches).as_text()
+    j1 = e1.round_fn(rnd).lower(s1, batches).as_text()
+    assert j0 == j1
+    s0, h0 = e0.run_rounds(s0, batch_fn(ds), 16)
+    s1, h1 = e1.run_rounds(s1, batch_fn(ds), 16)
+    assert max_diff(s0.params, s1.params) == 0.0
+    assert "sim_time_s" not in h0[0]
+    assert h1[0]["sim_time_s"] > 0.0 and "sim_sync_s" in h1[0]
+    assert [r["ce"] for r in h0] == [r["ce"] for r in h1]
+
+
+def test_history_sim_fields(setup):
+    ds, model = setup
+    topo = make_topology("uniform", spec=SPEC)
+    rt = RuntimeModel(compute_s=1.0, straggler="lognormal:0.5", seed=3)
+    eng = HSGD(model.loss, sgd(0.05), topo, runtime=rt)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, hist = eng.run_rounds(st, batch_fn(ds), 16)
+    times = [r["sim_time_s"] for r in hist]
+    assert all(a <= b for a, b in zip(times, times[1:]))
+    # per-level sync seconds are cumulative and only grow at event steps
+    l1 = [r["sim_sync_s"]["L1"] for r in hist]
+    assert l1[7] > 0.0 and l1[-1] == pytest.approx(2 * l1[7])
+    rep = eng.runtime_report()
+    assert rep["time_s"] == pytest.approx(times[-1], abs=1e-5)
+    assert eng.runtime_report(st) == rep  # state arg accepted, unused
+    assert HSGD(model.loss, sgd(0.05),
+                make_topology("uniform", spec=SPEC)).runtime_report() is None
+
+
+def test_elastic_drop_contract_params_and_opt(setup):
+    """THE elastic-participation contract: a worker dropped from a sync has
+    exactly the params/opt state of a run whose round ended with NO sync —
+    it computed its local updates, then neither contributed to nor received
+    the aggregate; admitted workers got the (masked) aggregate."""
+    ds, model = setup
+    mk = lambda: make_topology("uniform", spec=HierarchySpec((2, 4), (4, 4)))
+    eng = HSGD(model.loss, momentum(0.05), mk())
+    # round fns donate their state argument: reuse goes via a host snapshot
+    snap = jax.device_get(eng.init(jax.random.PRNGKey(0), model.init))
+    fresh = lambda: jax.tree.map(jnp.asarray, snap)
+    batches = tuple(batch_fn(ds)(t) for t in range(4))
+    mask = np.array([1, 1, 0, 1, 1, 0, 1, 1], bool)
+    ev = SyncEvent(level=1)
+    dropped, _ = eng.round_fn(Round(4, ev), masked=True)(
+        fresh(), batches, jnp.asarray(mask))
+    nosync, _ = eng.round_fn(Round(4, None))(fresh(), batches)
+    full, _ = eng.round_fn(Round(4, ev))(fresh(), batches)
+    for tree_d, tree_n in ((dropped.params, nosync.params),
+                           (dropped.opt_state, nosync.opt_state)):
+        for d, n in zip(jax.tree.leaves(tree_d), jax.tree.leaves(tree_n)):
+            np.testing.assert_array_equal(np.asarray(d)[~mask],
+                                          np.asarray(n)[~mask])
+    # admitted workers DID sync (and not to the unmasked aggregate)
+    assert max_diff(jax.tree.map(lambda x: x[mask], dropped.params),
+                    jax.tree.map(lambda x: x[mask], nosync.params)) > 0.0
+    assert max_diff(jax.tree.map(lambda x: x[mask], dropped.params),
+                    jax.tree.map(lambda x: x[mask], full.params)) > 0.0
+
+
+def test_elastic_drop_contract_comms_residuals(setup):
+    """Extends the PR-3 partial-participation tests: across a missed sync,
+    a dropped worker ALSO keeps its unconsumed error-feedback residual
+    bit-for-bit, while admitted workers' residuals are consumed/updated."""
+    ds, model = setup
+    mk = lambda: make_topology("uniform", spec=HierarchySpec((2, 4), (4, 4)))
+    eng = HSGD(model.loss, sgd(0.05), mk(), comms=Comms("topk", rate=0.25))
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    # accumulate nonzero residuals first (two full rounds)
+    st, _ = eng.run_rounds(st, batch_fn(ds), 8)
+    assert max(float(jnp.abs(r).max()) for r in jax.tree.leaves(st.comms)) > 0
+    old_res = [np.asarray(r).copy() for r in jax.tree.leaves(st.comms)]
+    batches = tuple(batch_fn(ds)(t) for t in range(8, 12))
+    mask = np.array([1, 0, 1, 1, 1, 1, 0, 1], bool)
+    nxt, _ = eng.round_fn(Round(4, SyncEvent(level=1)), masked=True)(
+        st, batches, jnp.asarray(mask))
+    for r_new, r_old in zip(jax.tree.leaves(nxt.comms), old_res):
+        np.testing.assert_array_equal(np.asarray(r_new)[~mask],
+                                      r_old[~mask])
+        assert float(np.abs(np.asarray(r_new)[mask] -
+                            r_old[mask]).max()) > 0.0
+
+
+def test_elastic_end_to_end_with_stragglers(setup):
+    """run_rounds with a straggler regime + deadline: drops happen, the
+    trajectory stays finite, elastic sim time <= full barrier per step
+    (same seed = same draws), and a homogeneous fleet is untouched."""
+    ds, model = setup
+    mk = lambda: make_topology("uniform", spec=SPEC)
+
+    def run(policy, straggler="fixed:0.25:6"):
+        rt = RuntimeModel(compute_s=1.0, straggler=straggler, policy=policy,
+                          seed=11)
+        eng = HSGD(model.loss, sgd(0.05), mk(), runtime=rt,
+                   comms=Comms("topk", rate=0.5))
+        st = eng.init(jax.random.PRNGKey(0), model.init)
+        st, hist = eng.run_rounds(st, batch_fn(ds), 16)
+        return eng, st, hist
+
+    eng_e, st_e, h_e = run(policy=1.0)
+    eng_f, st_f, h_f = run(policy=None)
+    assert eng_e.runtime_report()["dropped"][2] > 0
+    assert all(np.isfinite(r["ce"]) for r in h_e)
+    assert all(e["sim_time_s"] <= f["sim_time_s"] + 1e-9
+               for e, f in zip(h_e, h_f))
+    # no stragglers -> no drops -> bitwise the full-barrier trajectory
+    eng_0, st_0, h_0 = run(policy=1.0, straggler=None)
+    eng_1, st_1, h_1 = run(policy=None, straggler=None)
+    assert eng_0.runtime_report()["dropped"] == {1: 0, 2: 0}
+    assert max_diff(st_0.params, st_1.params) == 0.0
+    assert [r["sim_time_s"] for r in h_0] == [r["sim_time_s"] for r in h_1]
+
+
+def test_grouped_topology_runtime_end_to_end(setup):
+    """Elastic runtime on a GroupedTopology with heterogeneous per-group
+    periods: partial-group events and deadline drops compose."""
+    ds, model = setup
+    topo = GroupedTopology(contiguous(8, 2), G=8, I=(2, 4))
+    rt = RuntimeModel(compute_s=1.0, straggler="lognormal:0.9",
+                      policy=0.25, seed=4)
+    eng = HSGD(model.loss, sgd(0.05), topo, runtime=rt)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, hist = eng.run_rounds(st, batch_fn(ds), 16)
+    assert all(np.isfinite(r["ce"]) for r in hist)
+    times = [r["sim_time_s"] for r in hist]
+    assert all(a <= b for a, b in zip(times, times[1:]))
+    assert sum(eng.runtime_report()["dropped"].values()) > 0
+
+
+# ---------------------------------------------------------------------------
+# planner fit
+# ---------------------------------------------------------------------------
+def test_comm_model_fit_from_trace(setup):
+    """On a homogeneous full-barrier run the clock IS the CommModel closed
+    form, so the least-squares fit recovers the constants exactly and
+    wall_clock() reproduces the simulated makespan."""
+    ds, model = setup
+    topo = make_topology("uniform", spec=SPEC)
+    links = (LinkModel(2.0, 1e8), LinkModel(0.1, 1e9))
+    rt = RuntimeModel(compute_s=0.5, links=links)
+    eng = HSGD(model.loss, sgd(0.05), topo, runtime=rt)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, hist = eng.run_rounds(st, batch_fn(ds), 32)
+    fit = CommModel.fit_from_trace(hist, topo)
+    clock = rt.clock(topo, eng._payload_nbytes(st))
+    assert fit.compute_s == pytest.approx(0.5, rel=1e-6)
+    assert fit.global_round_s == pytest.approx(clock.event_cost_s(1), rel=1e-6)
+    assert fit.local_round_s == pytest.approx(clock.event_cost_s(2), rel=1e-6)
+    assert fit.wall_clock(32, G=8, I=2) == pytest.approx(
+        hist[-1]["sim_time_s"], rel=1e-6)
+    # a RESUMED trace (absolute t > 0, per-call clock restarting at 0) must
+    # fit the same constants: steps/events are regressed relative to the
+    # trace's own start
+    st, hist2 = eng.run_rounds(st, batch_fn(ds), 32)
+    assert hist2[0]["t"] == 33
+    fit2 = CommModel.fit_from_trace(hist2, topo)
+    assert fit2.compute_s == pytest.approx(0.5, rel=1e-6)
+    assert fit2.global_round_s == pytest.approx(fit.global_round_s, rel=1e-6)
+    assert fit2.local_round_s == pytest.approx(fit.local_round_s, rel=1e-6)
+    with pytest.raises(AssertionError, match="sim_time_s"):
+        CommModel.fit_from_trace([{"t": 1}], topo)

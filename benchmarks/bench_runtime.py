@@ -27,9 +27,16 @@ CI-assertable:
 
 Emits ``BENCH_runtime.json`` (schema: {topology: {regime: {policy: rec}}});
 the CI smoke step runs ``--smoke`` in the device matrix and uploads it next
-to BENCH_comms.json.
+to BENCH_comms.json.  ``--backend mesh|both`` adds a mesh leg per regime:
+the elastic arm re-runs through the shard_map backend in exact mode, the
+trajectory AND the simulated clocks are asserted bitwise-identical to the
+sim arm (the host-side clock is executor-independent by construction), and
+the record lands as ``elastic_mesh`` next to the sim arms — so the file
+documents that the elastic x straggler matrix RUNS on the backend that
+scales, per the same no-wall-clock rule.
 
     PYTHONPATH=src python benchmarks/bench_runtime.py [--smoke] [--out PATH]
+        [--backend sim|mesh|both]
 """
 from __future__ import annotations
 
@@ -73,11 +80,22 @@ DEADLINE_S = 2.0    # slack over the subtree's median arrival, every level
 SEED = 1
 
 
-def run_arm(ds, model, spec, links, straggler, deadline, T, eval_every=8):
+def make_mesh_executor(spec):
+    """The mesh arm runs exact=True: the replayed sim reduce is bitwise, so
+    the cross-backend assertion is deterministic (no tolerance tuning) and
+    the recorded numbers are PROOF of parity, not a second estimate."""
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_host_mesh
+    return MeshExecutor(make_host_mesh(group_sizes=spec.group_sizes),
+                        exact=True)
+
+
+def run_arm(ds, model, spec, links, straggler, deadline, T, eval_every=8,
+            executor="sim"):
     topo = make_topology("uniform", spec=spec)
     rt = RuntimeModel(compute_s=COMPUTE_S, links=links, straggler=straggler,
                       policy=deadline, seed=SEED)
-    eng = HSGD(model.loss, sgd(LR), topo, runtime=rt)
+    eng = HSGD(model.loss, sgd(LR), topo, runtime=rt, executor=executor)
     st = eng.init(jax.random.PRNGKey(0), model.init)
     gb = jax.tree.map(jnp.asarray, ds.global_batch(640))
 
@@ -112,7 +130,7 @@ def time_to_target(hist, target_acc):
     return None, None, None
 
 
-def bench_regime(ds, model, spec, links, straggler, T):
+def bench_regime(ds, model, spec, links, straggler, T, mesh: bool = False):
     eng_f, hist_f = run_arm(ds, model, spec, links, straggler, None, T)
     eng_e, hist_e = run_arm(ds, model, spec, links, straggler, DEADLINE_S, T)
 
@@ -141,24 +159,56 @@ def bench_regime(ds, model, spec, links, straggler, T):
                 "best_acc": round(max(accs(hist)), 4),
                 "dropped": rep["dropped"], "synced": rep["synced"]}
 
-    return {
+    out = {
         "target_acc": round(target, 4),
         "full_barrier": rec(eng_f, hist_f, sf, ttf, mf),
         "elastic": rec(eng_e, hist_e, se, tte, me),
         "speedup_at_target": round(ttf / tte, 4),
-    }, (hist_f, hist_e)
+    }
+    if mesh:
+        # the mesh leg: the same elastic x straggler matrix through the
+        # shard_map backend.  exact=True replays the sim reduce, so the
+        # whole history — losses, accs, masks, simulated clocks — must be
+        # IDENTICAL to the sim arm (asserted); the record proves the mesh
+        # backend runs the elastic regime, it does not re-estimate it.
+        eng_me, hist_me = run_arm(ds, model, spec, links, straggler,
+                                  DEADLINE_S, T,
+                                  executor=make_mesh_executor(spec))
+        assert [r["sim_time_s"] for r in hist_me] == \
+            [r["sim_time_s"] for r in hist_e], "mesh clock diverged from sim"
+        # params replay bitwise, so the published-model accuracies (computed
+        # FROM params at every eval point) must be exactly equal; the ce
+        # METRIC reduces in a different order (per-shard mean + pmean vs one
+        # in-array mean), so it only matches to f32 rounding
+        assert [r.get("acc") for r in hist_me] == \
+            [r.get("acc") for r in hist_e], \
+            "mesh(exact) trajectory diverged from sim"
+        assert all(abs(a["ce"] - b["ce"]) < 1e-5
+                   for a, b in zip(hist_me, hist_e))
+        sm, ttm, mm = time_to_target(hist_me, target)
+        out["elastic_mesh"] = dict(rec(eng_me, hist_me, sm, ttm, mm),
+                                   backend="mesh(exact)",
+                                   params_bitwise_vs_sim=True)
+    return out, (hist_f, hist_e)
 
 
-def main(quick: bool = True, out: str = "BENCH_runtime.json") -> dict:
+def main(quick: bool = True, out: str = "BENCH_runtime.json",
+         backend: str = "sim") -> dict:
     # num_classes=4 over 8 workers = every class on TWO workers: dropping a
     # straggler from a sync never orphans its data — the redundant-coverage
     # regime elastic participation is designed for (with one worker per
     # class, permanently dropping a fixed straggler caps the reachable
     # accuracy instead; that bias is real, not a bug — see test_runtime.py)
+    mesh = backend in ("mesh", "both")
+    if mesh and len(jax.devices()) < 8:
+        raise SystemExit(
+            "--backend mesh needs 8 devices: export "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+            "initializes (the CI 8-device leg does)")
     ds, model = make_world(n_workers=8, num_classes=4)
     T = 96 if quick else 384
     report = {"steps": T, "compute_s": COMPUTE_S, "deadline_s": DEADLINE_S,
-              "topologies": {}}
+              "backend": backend, "topologies": {}}
     for tname, (spec, links) in TOPOLOGIES.items():
         row = {"spec": {"group_sizes": spec.group_sizes,
                         "periods": spec.periods},
@@ -167,7 +217,7 @@ def main(quick: bool = True, out: str = "BENCH_runtime.json") -> dict:
         for rname, straggler in REGIMES.items():
             print(f"... {tname} / {rname}")
             row[rname], (hist_f, hist_e) = bench_regime(
-                ds, model, spec, links, straggler, T)
+                ds, model, spec, links, straggler, T, mesh=mesh)
             if rname == "none":
                 # homogeneous fleet: nobody misses a deadline, so elastic is
                 # the SAME run — identical losses and identical clocks
@@ -198,6 +248,15 @@ if __name__ == "__main__":
                          "simulated either way — nothing here measures "
                          "wall-clock)")
     ap.add_argument("--full", action="store_true", help="longer runs")
+    ap.add_argument("--backend", default="sim",
+                    choices=["sim", "mesh", "both"],
+                    help="'mesh'/'both' additionally runs the elastic arm "
+                         "of every regime through the shard_map backend "
+                         "(exact mode) and asserts the trajectory and the "
+                         "simulated clocks are bitwise the sim arm's — "
+                         "recorded per regime as 'elastic_mesh' (needs 8 "
+                         "devices)")
     ap.add_argument("--out", default="BENCH_runtime.json")
     args = ap.parse_args()
-    main(quick=args.smoke or not args.full, out=args.out)
+    main(quick=args.smoke or not args.full, out=args.out,
+         backend=args.backend)

@@ -65,42 +65,6 @@ class Aggregator(abc.ABC):
                  for k, v in payloads.items()}
         return self.decode(means, x)
 
-    def gather_aggregate(self, x: jax.Array, axis_names, group_sizes,
-                         level: int,
-                         weight: Optional[jax.Array] = None) -> jax.Array:
-        """Bitwise-exact axis-collective form: all_gather the FULL worker
-        block (``axis_names`` = one replica axis per level, outermost first)
-        and replay the sim executor's reshape-mean on it — same input shape,
-        same reduce axes, so XLA emits the identical reduction and the
-        result is bit-for-bit the single-device one for the plain-mean
-        rules (mean/compressed/sign — tested; the weighted fused
-        multiply+reduce still reassociates, staying within f32 rounding);
-        each shard then selects its own worker's row.  Moves n_workers x
-        the payload bytes of :meth:`axis_aggregate` — a verification mode,
-        not the production lowering.  ``x`` is a one-worker shard inside
-        ``shard_map``."""
-        m = len(group_sizes)
-        gs = tuple(group_sizes)
-        g = jax.lax.all_gather(x, axis_names, axis=0, tiled=True)  # (n, ...)
-        shaped = g.reshape(gs + g.shape[1:])
-        axes = tuple(range(level - 1, m))
-        wr = None
-        if weight is not None:
-            wg = jax.lax.all_gather(weight.reshape(-1), axis_names,
-                                    axis=0, tiled=True)
-            wr = wg.reshape(gs + (1,) * (shaped.ndim - m)) \
-                .astype(self.accum_dtype)
-        payloads = self.encode(shaped)
-        means = {k: axis_weighted_mean(v, wr, axes, self.accum_dtype)
-                 for k, v in payloads.items()}
-        out = self.decode(means, shaped)
-        out = jnp.broadcast_to(out, shaped.shape).reshape(g.shape)
-        idx = jnp.zeros((), jnp.int32)
-        for a, s in zip(axis_names, gs):
-            idx = idx * s + jax.lax.axis_index(a)
-        return jax.lax.dynamic_index_in_dim(out, idx, axis=0, keepdims=True)
-
-
 class MeanAggregator(Aggregator):
     """Exact paper semantics: f32 mean of the participating workers."""
 
@@ -212,6 +176,18 @@ def register_aggregator(name: str, cls) -> None:
 # ---------------------------------------------------------------------------
 # shared weighted-mean kernels (the logic formerly copy-pasted per topology)
 # ---------------------------------------------------------------------------
+def flat_worker_index(axis_names, sizes) -> jax.Array:
+    """This shard's flat worker index: row-major over the replica mesh axes
+    (outermost first) — the same order ``worker_axis_spec`` lays the leading
+    worker axis out in, so ``gathered[flat_worker_index(...)]`` is always
+    this shard's own row.  Only callable inside ``shard_map``."""
+    idx = jnp.zeros((), jnp.int32)
+    for a, s in zip(axis_names, sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
+
 def axis_weighted_mean(v: jax.Array, w: Optional[jax.Array], axes, acc) -> Any:
     """Mean of ``v`` over ``axes`` (keepdims), optionally weighted by ``w``
     (broadcastable); accumulation pinned to ``acc`` so a bf16 payload stays

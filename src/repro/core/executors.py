@@ -18,7 +18,16 @@ device mapping and the lowering of the sync collective:
   axes of levels >= ℓ (``topology.level_axes`` names them, the aggregator's
   ``axis_aggregate`` supplies the encode/pmean/decode rule) — what the
   engine docstring always promised, now emitted explicitly instead of left
-  to GSPMD luck.
+  to GSPMD luck.  ``GroupedTopology`` lowers over the FLAT worker axis with
+  one-hot membership weights, and runtime participation masks (Algorithm-1
+  partial participation, elastic-deadline drops) thread in as per-worker
+  collective weights — every scenario the simulator runs also runs here.
+
+Both backends implement the same **masked-round contract** (what a worker
+excluded from a sync keeps — see :class:`MeshExecutor` for the table) and
+the same ``exact=True``-replayable reduce, so sim is always the bitwise
+reference for mesh verification.  DESIGN.md §2 is the full lowering
+contract.
 
 Executors are constructed via :func:`make_executor` ("sim" | "mesh" | an
 instance) and bound to one engine; compiled step/round functions are cached
@@ -34,6 +43,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.aggregators import flat_worker_index
 from repro.core.hsgd import (HSGDState, Round, _merge_moments, _moments_only)
 from repro.core.topology import SyncEvent
 
@@ -115,6 +125,13 @@ def _keep_rows(mask, new, old):
     return jax.tree.map(sel, new, old)
 
 
+def _keep_shard(keep, new, old):
+    """Per-shard counterpart of :func:`_keep_rows`: ``keep`` is this
+    worker's scalar bool, selecting its whole shard (mesh backend, where
+    each shard holds exactly one worker's row)."""
+    return jax.tree.map(lambda a, b: jnp.where(keep, a, b), new, old)
+
+
 def _stack_batches(n_local: int, batches):
     """length-``n_local`` tuple of per-step batches -> one (n_local, ...)
     stacked pytree, INSIDE the jitted graph so one round is exactly one
@@ -136,7 +153,16 @@ class SimExecutor(Executor):
     ``plan.comms.sync``: the tree is fused into flat per-dtype buckets,
     each worker's payload codec-roundtripped (error-feedback residuals
     threaded through ``HSGDState.comms``), and ``topology.aggregate`` runs
-    on the O(dtypes) buffers — the aggregator rule is applied unchanged."""
+    on the O(dtypes) buffers — the aggregator rule is applied unchanged.
+
+    **Masked-round contract** (shared with ``MeshExecutor``, which must
+    replay it bitwise in exact mode): ``step_fn(event, masked=True)`` is
+    Algorithm-1 partial participation — a masked-out worker's update is
+    discarded and it still receives the aggregate; ``round_fn(rnd,
+    masked=True)`` is the elastic-drop semantics — a dropped worker ran its
+    local updates but neither contributes to nor receives the aggregate,
+    keeping its exact post-update params, opt state and unconsumed comms
+    residuals (see :meth:`_apply_event`)."""
 
     def _apply_event(self, params, opt_state, cstate, event: SyncEvent,
                      mask=None, drop: bool = False):
@@ -258,22 +284,39 @@ class MeshExecutor(Executor):
     """One worker per replica-mesh coordinate; sync events ARE named-axis
     all-reduces.
 
-    mesh: a mesh whose replica axes (everything but 'model') mirror the
-    hierarchy's ``group_sizes`` outermost-first — build one with
-    ``launch.mesh.make_hsgd_mesh(spec.group_sizes)`` / ``make_host_mesh(
-    group_sizes=...)``.  None auto-builds it from the bound topology (needs
-    prod(group_sizes) devices).  Params are placed ``P(('pod','data'), ...)``
-    so the level-ℓ mean is an all-reduce over exactly the mesh axes of
-    levels >= ℓ.  Runtime participation masks stay a sim-backend feature;
-    static per-worker weights (WeightedAggregator / event weights) are
-    supported.
+    mesh: for a uniform hierarchy, a mesh whose replica axes (everything but
+    'model') mirror the hierarchy's ``group_sizes`` outermost-first — build
+    one with ``launch.mesh.make_hsgd_mesh(spec.group_sizes)`` /
+    ``make_host_mesh(group_sizes=...)``; a ``GroupedTopology`` has no
+    per-level axis structure, so any replica layout with
+    ``n_replicas(mesh) == topology.n`` works (events lower over the FLAT
+    worker axis with one-hot membership weights — see
+    ``GroupedTopology.shard_aggregate``).  None auto-builds the matching
+    mesh from the bound topology (needs prod(group_sizes) / n devices).
+    Params are placed ``P(('pod','data'), ...)`` so the level-ℓ mean is an
+    all-reduce over exactly the mesh axes of levels >= ℓ.
 
-    exact: lower syncs through ``Aggregator.gather_aggregate`` (all_gather +
-    the sim reshape-mean replayed with identical reduce shape) instead of
-    ``pmean`` — bit-identical to the SimExecutor trajectory for the
-    plain-mean rules (mean/compressed/sign) at n_workers x the sync bytes.
-    Verification mode; the default pmean lowering matches sim to f32
-    rounding (tested)."""
+    **Masked-round contract** (parity with ``SimExecutor``): runtime
+    participation masks thread into the round core as a per-worker weight
+    on the collective.  ``step_fn(event, masked=True)`` is the Algorithm-1
+    semantics — a masked-out worker contributes nothing but still RECEIVES
+    the aggregate (and keeps its unconsumed comms residual);
+    ``round_fn(rnd, masked=True)`` is the elastic-deadline semantics — a
+    dropped worker still runs its local updates but neither contributes to
+    nor receives the aggregate, keeping its exact post-update params, opt
+    state AND unconsumed comms residuals.  Elastic runtime policies
+    therefore run on this backend too (``HSGD(..., executor='mesh',
+    runtime=RuntimeModel(policy=...))``).
+
+    exact: replay the ENTIRE sim reduce per shard — all_gather the full
+    worker block and run ``topology.aggregate`` on it (identical input
+    shape, identical reduce axes, identical weight combination), each shard
+    then selecting its own row — instead of the production pmean/psum
+    lowering.  Bit-identical to the SimExecutor trajectory for every
+    topology (uniform AND grouped), every event (full, partial-group,
+    masked, dropped) and every codec, at n_workers x the sync bytes.
+    Verification mode; the default lowering matches sim to
+    accumulation-dtype rounding (tested)."""
 
     def __init__(self, mesh=None, *, exact: bool = False):
         super().__init__()
@@ -282,31 +325,28 @@ class MeshExecutor(Executor):
         self.rep_axes = None
 
     def _validate(self) -> None:
-        from repro.launch.mesh import make_hsgd_mesh, replica_axes
+        from repro.launch.mesh import (make_hsgd_mesh, n_replicas,
+                                       replica_axes)
         topo = self.plan.topology
         spec = getattr(topo, "spec", None)
-        if spec is None:
-            raise NotImplementedError(
-                f"MeshExecutor needs a uniform hierarchy to map levels onto "
-                f"named mesh axes; {type(topo).__name__} has none — run "
-                f"this topology on the simulator: HSGD(..., executor='sim')")
-        rt = getattr(self.plan, "runtime", None)
-        if rt is not None and rt.elastic:
-            raise NotImplementedError(
-                "MeshExecutor does not lower elastic participation: a "
-                "deadline drop becomes a runtime mask, and masks are a "
-                "sim-only feature — run elastic policies on the simulator "
-                "(HSGD(..., executor='sim')) or use a full-barrier runtime "
-                "(RuntimeModel(policy=None)), which is pure accounting")
         if self.mesh is None:
-            self.mesh = make_hsgd_mesh(spec.group_sizes)
+            self.mesh = make_hsgd_mesh(
+                spec.group_sizes if spec is not None else (topo.n,))
         self.rep_axes = replica_axes(self.mesh)
         sizes = tuple(self.mesh.shape[a] for a in self.rep_axes)
-        if sizes != tuple(spec.group_sizes):
+        if spec is not None:
+            if sizes != tuple(spec.group_sizes):
+                raise ValueError(
+                    f"mesh replica axes {dict(zip(self.rep_axes, sizes))} "
+                    f"do not mirror the hierarchy levels "
+                    f"{spec.group_sizes}; build the mesh with "
+                    f"make_hsgd_mesh(spec.group_sizes)")
+        elif n_replicas(self.mesh) != topo.n:
             raise ValueError(
-                f"mesh replica axes {dict(zip(self.rep_axes, sizes))} do not "
-                f"mirror the hierarchy levels {spec.group_sizes}; build the "
-                f"mesh with make_hsgd_mesh(spec.group_sizes)")
+                f"{type(topo).__name__} lowers over the flat worker axis: "
+                f"need n_replicas(mesh) == {topo.n} workers, got "
+                f"{n_replicas(self.mesh)} "
+                f"({dict(zip(self.rep_axes, sizes))})")
 
     def place(self, state: HSGDState) -> HSGDState:
         from repro.launch.partitioning import hsgd_state_shardings
@@ -320,113 +360,169 @@ class MeshExecutor(Executor):
         return worker_axis_spec(self.rep_axes, ndim, lead_axis)
 
     # -- the shard_mapped round body ----------------------------------------
-    def _round_core(self, event: Optional[SyncEvent]):
-        """(params, opt_state, comms_state, stacked_batches) -> (params,
-        opt_state, comms_state, metrics) with the local scan and the event
-        collective under one shard_map; each shard holds exactly one worker.
-        The round length is carried by the stacked batch's leading axis.
+    def _round_core(self, event: Optional[SyncEvent], masked: bool = False,
+                    drop: bool = False):
+        """(params, opt_state, comms_state, stacked_batches[, mask]) ->
+        (params, opt_state, comms_state, metrics) with the local scan and
+        the event collective under one shard_map; each shard holds exactly
+        one worker.  The round length is carried by the stacked batch's
+        leading axis.
 
         With a comms plan bound, each shard fuses its ``(1, ...)`` leaves
         into flat per-dtype buffers, codec-roundtrips them (error-feedback
         residuals are sharded like params), and the named-axis collective
         runs once per BUFFER — O(dtypes) pmeans per sync in the lowered
-        program instead of O(leaves)."""
+        program instead of O(leaves).
+
+        ``masked=True`` threads a replicated (n,) runtime mask into the
+        body; each shard folds its own mask entry into the collective's
+        weight (mirroring ``Topology._event_weights``) and row-selects its
+        state afterwards.  ``drop`` picks between the two mask semantics —
+        see the class docstring."""
         plan, mesh, rep = self.plan, self.mesh, self.rep_axes
         topo = plan.topology
         vupdate = jax.vmap(plan.local_update_fn())
-        axes = topo.level_axes(event, rep) if event is not None else ()
+        sizes = tuple(mesh.shape[a] for a in rep)
+        acc = topo.aggregator.accum_dtype
         wvec = topo._event_weights(event, None) if event is not None else None
+        part = topo.participants(event) if event is not None else None
 
-        def apply_event(params, opt_state, cstate, w):
-            agg = topo.aggregator
+        def apply_event(params, opt_state, cstate, mask, widx):
             if self.exact:
-                one = lambda x: agg.gather_aggregate(
-                    x, rep, topo.spec.group_sizes, event.level, weight=w)
+                # replay the ENTIRE sim reduce on the gathered worker block
+                # (same shapes, same weight combination -> bitwise), then
+                # select this shard's own row
+                def reduce_fn(tree):
+                    g = jax.tree.map(
+                        lambda x: jax.lax.all_gather(x, rep, axis=0,
+                                                     tiled=True), tree)
+                    out = topo.aggregate(g, event, mask=mask)
+                    return jax.tree.map(
+                        lambda x: jax.lax.dynamic_index_in_dim(
+                            x, widx, axis=0, keepdims=True), out)
             else:
-                one = lambda x: agg.axis_aggregate(x, axes, weight=w)
-            # partial-group events never reach the mesh backend
-            # (level_axes asserts event.groups is None), so no
-            # participant restore is needed here
-            return _apply_sync(plan, lambda tree: jax.tree.map(one, tree),
-                               params, opt_state, cstate)
+                w = None if mask is None else mask.astype(acc)[widx]
+                if wvec is not None:
+                    ws = jnp.asarray(wvec)[widx]
+                    w = ws if w is None else w * ws
+                one = lambda x: topo.shard_aggregate(
+                    x, rep, event, worker_index=widx, weight=w)
+                reduce_fn = lambda tree: jax.tree.map(one, tree)
+            new_p, new_o, new_c = _apply_sync(plan, reduce_fn, params,
+                                              opt_state, cstate)
+            if plan.comms is not None:
+                # same restores as SimExecutor._apply_event, per shard: the
+                # comms path hands the reduce codec-roundtripped payloads,
+                # so workers a partial-group event did not sync get their
+                # true state back, and a masked-out worker's error-feedback
+                # residual is not consumed
+                if part is not None:
+                    keep = jnp.asarray(part)[widx]
+                    new_p = _keep_shard(keep, new_p, params)
+                    new_o = _keep_shard(keep, new_o, opt_state)
+                    if cstate is not None:
+                        new_c = _keep_shard(keep, new_c, cstate)
+                if mask is not None and cstate is not None:
+                    new_c = _keep_shard(mask.astype(bool)[widx], new_c,
+                                        cstate)
+            if drop:
+                keep = mask.astype(bool)[widx]
+                new_p = _keep_shard(keep, new_p, params)
+                new_o = _keep_shard(keep, new_o, opt_state)
+                if cstate is not None:
+                    new_c = _keep_shard(keep, new_c, cstate)
+            return new_p, new_o, new_c
 
-        def body(params, opt_state, cstate, stacked, w):
+        def body(params, opt_state, cstate, stacked, mask):
             # per-shard shapes: leading worker axis == 1
             def local_block(carry, batch):
                 p, o = carry
                 p, o, metrics = vupdate(p, o, batch)
                 return (p, o), jax.tree.map(lambda m: m.mean(), metrics)
 
+            (p0, o0) = params, opt_state
             (params, opt_state), metrics = jax.lax.scan(
                 local_block, (params, opt_state), stacked)
+            widx = flat_worker_index(rep, sizes)
+            if masked and not drop:
+                # Algorithm-1 masked step: a non-participating worker never
+                # ran its update (it still receives the aggregate below)
+                keep = mask.astype(bool)[widx]
+                params = _keep_shard(keep, params, p0)
+                opt_state = _keep_shard(keep, opt_state, o0)
             if event is not None:
-                params, opt_state, cstate = apply_event(params, opt_state,
-                                                        cstate, w)
+                params, opt_state, cstate = apply_event(
+                    params, opt_state, cstate,
+                    mask if masked else None, widx)
             # worker-mean of the per-step metrics, replicated everywhere
             metrics = jax.tree.map(lambda m: jax.lax.pmean(m, rep), metrics)
             return params, opt_state, cstate, metrics
 
-        def core(params, opt_state, cstate, stacked):
+        def core(params, opt_state, cstate, stacked, mask=None):
             pspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), params)
             ospec = jax.tree.map(lambda x: self._lead_spec(x.ndim), opt_state)
             cspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), cstate)
             bspec = jax.tree.map(lambda x: self._lead_spec(x.ndim, 1), stacked)
             # pallas_call (the comms codec kernels) has no shard_map
-            # replication rule; the collective outputs are replicated by
+            # replication rule, and masked rounds mix per-shard row-selects
+            # into the collective outputs; the aggregates are replicated by
             # construction (pmean/all_gather), so skipping the check is safe
-            kw = dict(check_rep=False) if plan.comms is not None else {}
-            if wvec is None:
+            kw = dict(check_rep=False) \
+                if (plan.comms is not None or masked) else {}
+            if not masked:
                 fn = shard_map(
                     lambda p, o, c, b: body(p, o, c, b, None), mesh=mesh,
                     in_specs=(pspec, ospec, cspec, bspec),
                     out_specs=(pspec, ospec, cspec, P()), **kw)
                 return fn(params, opt_state, cstate, stacked)
+            # the mask rides in replicated: every shard reads its own entry
             fn = shard_map(
-                lambda p, o, c, b, w: body(p, o, c, b, w), mesh=mesh,
-                in_specs=(pspec, ospec, cspec, bspec, self._lead_spec(1)),
+                lambda p, o, c, b, m: body(p, o, c, b, m), mesh=mesh,
+                in_specs=(pspec, ospec, cspec, bspec, P()),
                 out_specs=(pspec, ospec, cspec, P()), **kw)
-            return fn(params, opt_state, cstate, stacked, jnp.asarray(wvec))
+            return fn(params, opt_state, cstate, stacked, mask)
 
         return core
 
     # -- compiled entry points ----------------------------------------------
     def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
-        if masked:
-            raise NotImplementedError(
-                "runtime participation masks are not lowered by the mesh "
-                "backend; use executor='sim' for partial participation")
-        core = self._round_core(event)  # fails fast, before any shard_map
+        # Algorithm-1 mask semantics when masked (drop=False): see class doc
+        core = self._round_core(event, masked=masked)  # fails fast
 
-        def step(state: HSGDState, batch):
+        def step(state: HSGDState, batch, mask=None):
+            args = () if not masked else (jnp.asarray(mask),)
             params, opt_state, cstate, metrics = core(
                 state.params, state.opt_state, state.comms,
-                jax.tree.map(lambda x: x[None], batch))
+                jax.tree.map(lambda x: x[None], batch), *args)
             metrics = jax.tree.map(lambda m: m[0], metrics)
             return HSGDState(params, opt_state, state.step + 1,
                              cstate), metrics
 
         if not self.plan._jit:
             return step
-        return jax.jit(step, donate_argnums=0)
+        return jax.jit(step, donate_argnums=0) if masked else \
+            jax.jit(lambda s, b: step(s, b), donate_argnums=0)
 
     def _build_round(self, rnd: Round, masked: bool = False):
+        # elastic-drop mask semantics when masked (drop=True): see class doc
         if masked:
-            raise NotImplementedError(
-                "runtime participation masks are not lowered by the mesh "
-                "backend; use executor='sim' for partial participation")
-        core = self._round_core(rnd.event)
+            assert rnd.event is not None, \
+                "a masked round needs a sync event to drop workers from"
+        core = self._round_core(rnd.event, masked=masked, drop=masked)
 
-        def round_fn(state: HSGDState, batches):
+        def round_fn(state: HSGDState, batches, mask=None):
             stacked = _stack_batches(rnd.n_local, batches)
+            args = () if not masked else (jnp.asarray(mask),)
             params, opt_state, cstate, metrics = core(
-                state.params, state.opt_state, state.comms, stacked)
+                state.params, state.opt_state, state.comms, stacked, *args)
             state = HSGDState(params, opt_state, state.step + rnd.n_local,
                               cstate)
             return state, metrics  # metrics stacked (n_local,) per entry
 
         if not self.plan._jit:
             return round_fn
-        return jax.jit(round_fn, donate_argnums=0)
+        return jax.jit(round_fn, donate_argnums=0) if masked else \
+            jax.jit(lambda s, b: round_fn(s, b), donate_argnums=0)
 
 
 # ---------------------------------------------------------------------------

@@ -103,8 +103,9 @@ class HSGD:
     (per-worker straggler clocks, per-level link costs priced by the comms
     payload bytes), adds ``sim_time_s``/``sim_sync_s`` to every history
     record, and — with an elastic policy — converts missed sync deadlines
-    into runtime-mask drops (sim executor only; the per-step :meth:`step`
-    path ignores the runtime, pass masks there yourself).
+    into runtime-mask drops on either executor (the mesh backend lowers the
+    mask as a per-worker collective weight; the per-step :meth:`step` path
+    ignores the runtime, pass masks there yourself).
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,

@@ -64,7 +64,18 @@ class SyncEvent:
 # protocol
 # ---------------------------------------------------------------------------
 class Topology(abc.ABC):
-    """Formal contract for 'which workers average when, and how'."""
+    """Formal contract for 'which workers average when, and how'.
+
+    Every topology answers in two forms that the executors keep in
+    lockstep: the in-array form (:meth:`aggregate`, the sim reference —
+    also what the mesh backend's ``exact=True`` mode replays on an
+    all-gathered block for bitwise verification) and the named-axis form
+    (:meth:`level_axes` + :meth:`shard_aggregate`, the production mesh
+    lowering, equal to the reference up to accumulation-dtype rounding).
+    Runtime participation masks enter both forms as per-worker weights:
+    a masked-out worker contributes nothing to any mean; whether it
+    *receives* the result is the executor's masked-round contract, not
+    the topology's."""
 
     n: int                      # number of workers
     periods: Tuple[int, ...]    # (P_1, ..., P_M), P_1 = G
@@ -90,13 +101,37 @@ class Topology(abc.ABC):
                    axis_names: Tuple[str, ...]) -> Tuple[str, ...]:
         """The named mesh axes whose all-reduce realizes ``event``.
 
-        ``axis_names`` is one replica mesh axis per hierarchy level, outermost
-        (level 1) first; a level-ℓ event lowers to a collective over the axes
-        of levels >= ℓ.  Topologies with no uniform level structure cannot map
-        onto mesh axes and raise."""
+        For a uniform hierarchy ``axis_names`` is one replica mesh axis per
+        level, outermost (level 1) first, and a level-ℓ event lowers to a
+        collective over the axes of levels >= ℓ.  Topologies with no uniform
+        level structure (GroupedTopology) lower every event over ALL replica
+        axes instead — the flat worker axis — and express the grouping as
+        (N, n) one-hot weights inside :meth:`shard_aggregate`."""
         raise NotImplementedError(
-            f"{type(self).__name__} does not map onto named mesh axes; "
-            "the mesh backend needs a uniform hierarchy (UniformTopology)")
+            f"{type(self).__name__} does not map onto named mesh axes")
+
+    def shard_aggregate(self, x, axis_names: Tuple[str, ...],
+                        event: SyncEvent, *, worker_index,
+                        weight=None):
+        """Production mesh lowering of ``event`` for ONE worker's shard —
+        the named-axis-collective counterpart of :meth:`aggregate`, only
+        callable inside ``shard_map``.
+
+        x: this shard's payload (leading worker axis of size 1);
+        axis_names: the replica mesh axes (outermost first);
+        worker_index: this shard's flat worker index
+        (:func:`~repro.core.aggregators.flat_worker_index`);
+        weight: this shard's scalar weight — the executor's combination of
+        the runtime participation mask and any static per-worker weights
+        (None = plain mean).  A zero weight means this worker contributes
+        nothing to the collective; what it *keeps* is decided by the
+        executor (Algorithm-1 masks receive the aggregate, elastic drops do
+        not).  Matches :meth:`aggregate` to accumulation-dtype rounding (the
+        collective reduce reassociates); the bitwise path is the executor's
+        ``exact=True`` replay."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no named-axis lowering; "
+            "run it on the simulator (HSGD(..., executor='sim'))")
 
     # -- participation ------------------------------------------------------
     def participants(self, event: SyncEvent) -> Optional[np.ndarray]:
@@ -155,8 +190,13 @@ class UniformTopology(Topology):
             f"for {m}-level {self.spec}"
         assert 1 <= event.level <= m, (event, self.spec)
         assert event.groups is None, \
-            "partial-group events have no named-axis lowering"
+            "uniform hierarchies never emit partial-group events"
         return tuple(axis_names[event.level - 1:])
+
+    def shard_aggregate(self, x, axis_names, event: SyncEvent, *,
+                        worker_index, weight=None):
+        return self.aggregator.axis_aggregate(
+            x, self.level_axes(event, axis_names), weight=weight)
 
     def level_groupings(self) -> Dict[int, Grouping]:
         return {l: contiguous(self.n, self.spec.n_at_level(l))
@@ -193,7 +233,20 @@ class UniformTopology(Topology):
 class GroupedTopology(Topology):
     """Two-level H-SGD with an explicit (possibly non-uniform) Grouping and
     per-group local periods I_i.  Aggregation is an (N, n) membership
-    segment-mean — O(N*n) instead of the old dense n x n mixing product."""
+    segment-mean — O(N*n) instead of the old dense n x n mixing product.
+
+    Runs on BOTH executors.  Under sim, :meth:`aggregate` is the in-array
+    segment-mean; under mesh there is no per-level axis structure to name,
+    so every event lowers over the FLAT worker axis (``level_axes`` returns
+    all replica axes) and :meth:`shard_aggregate` expresses the membership
+    as one-hot weights: each shard contributes ``onehot(group) * w * x`` to
+    a single psum of (N, payload) group numerators, then selects its own
+    group's mean.  Partial events (``SyncEvent(groups=...)``, heterogeneous
+    per-group periods) and runtime masks ride the same form — non-syncing
+    groups keep their exact rows, mirroring :meth:`aggregate`; the
+    executor's ``exact=True`` mode replays :meth:`aggregate` itself on an
+    all-gathered block, so grouped mesh rounds are bitwise-identical to
+    sim."""
 
     def __init__(self, grouping: Grouping, G: int,
                  I: Union[int, Tuple[int, ...]],
@@ -223,6 +276,51 @@ class GroupedTopology(Topology):
 
     def level_groupings(self) -> Dict[int, Grouping]:
         return {1: self.grouping}
+
+    def level_axes(self, event: SyncEvent,
+                   axis_names: Tuple[str, ...]) -> Tuple[str, ...]:
+        """Flat-worker-axis lowering: a grouped event's collective runs over
+        ALL replica axes (the membership lives in :meth:`shard_aggregate`'s
+        one-hot weights, not in the mesh shape)."""
+        assert event.level in (1, 2), event
+        return tuple(axis_names)
+
+    def shard_aggregate(self, x, axis_names, event: SyncEvent, *,
+                        worker_index, weight=None):
+        """One psum of (N, payload) membership-weighted numerators over the
+        flat worker axis; each shard then selects its own group's mean —
+        the named-axis form of the (N, n) segment-mean, N x the payload
+        bytes of a uniform level's pmean."""
+        assert event.level in (1, 2), event
+        agg = self.aggregator
+        acc = agg.accum_dtype
+        N = self.grouping.N
+        axes = self.level_axes(event, axis_names)
+        if event.level == 1 or event.groups is None:
+            syncing = np.ones(N, bool)
+        else:
+            syncing = np.asarray(event.groups)
+        gid = jnp.asarray(self._assignment)[worker_index]     # my group id
+        col = jax.nn.one_hot(gid, N, dtype=acc)               # my (N,) column
+        w = jnp.asarray(1.0, acc) if weight is None \
+            else jnp.asarray(weight, acc).reshape(())
+        den = jnp.maximum(jax.lax.psum(col * w, axes), 1e-9)  # (N,)
+        flat = x.reshape(x.shape[0], -1)                      # (1, dim)
+        payloads = agg.encode(flat)
+        means = {}
+        for k, v in payloads.items():
+            num = jax.lax.psum(col[:, None] * (v.astype(acc) * w), axes)
+            gm = num / den[:, None]                           # (N, dim)
+            if event.level == 1:
+                # global = unweighted mean of group means (paper A.1)
+                gm = jnp.broadcast_to(gm.mean(0, keepdims=True, dtype=acc),
+                                      gm.shape)
+            means[k] = jax.lax.dynamic_index_in_dim(gm, gid, axis=0,
+                                                    keepdims=True)
+        out = agg.decode(means, flat)
+        keep = jnp.asarray(syncing[self._assignment])[worker_index]
+        out = jnp.where(keep, out, flat)
+        return out.astype(x.dtype).reshape(x.shape)
 
     def participants(self, event: SyncEvent) -> Optional[np.ndarray]:
         if event.level == 1 or event.groups is None:

@@ -42,7 +42,10 @@ def make_hsgd_mesh(group_sizes: Tuple[int, ...], n_model: int = 1,
     """Mesh whose replica axes mirror a uniform hierarchy: axis ℓ has size
     N_ℓ (``group_sizes``, outermost first), plus a trailing 'model' axis for
     within-worker tensor parallelism.  Needs prod(group_sizes) * n_model
-    devices."""
+    devices.  For a ``GroupedTopology`` (no per-level axis structure) pass
+    ``(n_workers,)`` — grouped events lower over the flat worker axis with
+    one-hot membership weights, so any replica factorization whose product
+    is ``n_workers`` also works."""
     names = tuple(axis_names) if axis_names else level_axis_names(
         len(group_sizes))
     assert len(names) == len(group_sizes), (names, group_sizes)

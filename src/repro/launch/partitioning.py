@@ -163,7 +163,11 @@ def hsgd_state_shardings(mesh, state: Any):
     array leaf's leading worker axis spans the replica axes (one worker per
     replica-mesh coordinate), remaining dims replicated — within-worker
     'model' TP composes on top via :func:`params_shardings` once the loss is
-    written with named-axis collectives.  Scalars (state.step) replicate."""
+    written with named-axis collectives.  Scalars (state.step) replicate.
+    The worker-axis order is row-major over the replica axes (outermost
+    first) — the same order ``flat_worker_index`` reconstructs inside
+    shard_map, which is what lets grouped topologies and runtime masks
+    address 'worker j' consistently on any mesh factorization."""
     from repro.launch.mesh import replica_axes
     rep = replica_axes(mesh)
 

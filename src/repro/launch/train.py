@@ -102,7 +102,8 @@ def build_argparser():
                          "('2.0') or per-level 'L1:2.0,L2:0.5' — workers "
                          "missing a sync's deadline are dropped from that "
                          "event only, keeping their params and comms "
-                         "residuals (needs --runtime; sim backend only)")
+                         "residuals (needs --runtime; works on both "
+                         "backends)")
     ap.add_argument("--runtime-seed", type=int, default=0,
                     help="straggler sampler seed (draws are pure in "
                          "(seed, step): policies compare on identical "

@@ -21,8 +21,10 @@ participation contract (``admit`` -> (n,) bool): the clock hands the mask
 to the engine, which aggregates over admitted workers only while dropped
 workers keep their exact post-update params AND their unconsumed comms
 residuals (they transmitted nothing, they received nothing — they were
-still computing when the barrier closed).  See
-``SimExecutor._build_round(..., masked=True)``.
+still computing when the barrier closed).  Both executors honor it: see
+``SimExecutor._build_round(..., masked=True)`` and the mesh backend's
+mask-weighted collective lowering (``MeshExecutor`` docstring; DESIGN.md
+has the full contract).
 """
 from __future__ import annotations
 
@@ -35,8 +37,8 @@ import numpy as np
 class ParticipationPolicy(abc.ABC):
     """Per-subtree admission rule for one sync barrier."""
 
-    #: True if this policy can drop workers (the mesh backend rejects such
-    #: policies at construction; full-barrier is pure accounting).
+    #: True if this policy can drop workers (its drops route rounds through
+    #: the executors' masked variants; full-barrier is pure accounting).
     elastic: bool = False
 
     @abc.abstractmethod

@@ -14,10 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (HSGD, Executor, GroupedTopology, HierarchySpec,
-                        MeshExecutor, SimExecutor, SyncEvent,
-                        WeightedAggregator, contiguous, make_executor,
-                        make_topology)
+from repro.core import (HSGD, Executor, GroupedTopology, Grouping,
+                        HierarchySpec, MeshExecutor, Round, SimExecutor,
+                        SyncEvent, WeightedAggregator, contiguous,
+                        make_executor, make_topology)
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
@@ -78,28 +78,28 @@ def test_hsgd_accepts_executor_spellings(setup):
     assert eng.executor.plan is eng
 
 
-def test_mesh_rejects_grouped_topology(setup):
+@needs_devices
+def test_mesh_accepts_grouped_topology(setup):
+    """GroupedTopology runs on the mesh backend (flat worker-axis lowering);
+    the auto-built mesh is the (n,)-replica one."""
     ds, model = setup
     topo = GroupedTopology(contiguous(N, 2), G=8, I=4)
-    with pytest.raises(NotImplementedError, match="sim"):
-        HSGD(model.loss, sgd(0.05), topo, executor="mesh")
+    eng = HSGD(model.loss, sgd(0.05), topo, executor="mesh")
+    assert tuple(eng.executor.mesh.shape[a]
+                 for a in eng.executor.rep_axes) == (N,)
 
 
-def test_mesh_rejects_elastic_runtime_at_construction(setup):
-    """An elastic policy becomes runtime masks, which the mesh backend cannot
-    lower — the refusal must fire at construction, not from inside
-    shard_map."""
+@needs_devices
+def test_mesh_accepts_elastic_runtime_at_construction(setup):
+    """An elastic policy becomes runtime masks, which the mesh backend now
+    lowers as per-worker collective weights — construction succeeds (it
+    used to raise NotImplementedError naming the sim fallback)."""
     from repro.runtime import RuntimeModel
     ds, model = setup
     mk = lambda: make_topology("two_level", n=N, N=2, G=8, I=4)
-    with pytest.raises(NotImplementedError, match="sim"):
-        HSGD(model.loss, sgd(0.05), mk(), executor="mesh",
-             runtime=RuntimeModel(compute_s=1.0, policy=2.0))
-    if len(jax.devices()) >= N:
-        # full-barrier runtime is pure host-side accounting: mesh accepts it
-        eng = HSGD(model.loss, sgd(0.05), mk(), executor="mesh",
-                   runtime=RuntimeModel(compute_s=1.0))
-        assert eng.runtime is not None and not eng.runtime.elastic
+    eng = HSGD(model.loss, sgd(0.05), mk(), executor="mesh",
+               runtime=RuntimeModel(compute_s=1.0, policy=2.0))
+    assert eng.runtime is not None and eng.runtime.elastic
 
 
 def test_level_axes_mapping():
@@ -110,9 +110,12 @@ def test_level_axes_mapping():
     assert topo.level_axes(SyncEvent(level=3), axes) == ("data",)
     with pytest.raises(AssertionError):
         topo.level_axes(SyncEvent(level=1), ("pod", "data"))  # wrong depth
+    # grouped topologies lower every event over the FLAT worker axis (the
+    # membership rides as one-hot weights in shard_aggregate)
     grouped = GroupedTopology(contiguous(N, 2), G=8, I=4)
-    with pytest.raises(NotImplementedError):
-        grouped.level_axes(SyncEvent(level=1), ("data",))
+    assert grouped.level_axes(SyncEvent(level=1), ("data",)) == ("data",)
+    assert grouped.level_axes(
+        SyncEvent(level=2, groups=(True, False)), ("data",)) == ("data",)
 
 
 def test_level_groupings_derivation():
@@ -204,30 +207,29 @@ def test_mesh_step_matches_rounds(setup):
 
 
 @needs_devices
-def test_mesh_rejects_mask_and_mismatched_mesh(setup):
+def test_mesh_rejects_mismatched_mesh(setup):
     from repro.launch.mesh import make_host_mesh
     ds, model = setup
     spec, gs = SPECS["two_level"]
-    topo = make_topology("uniform", spec=spec)
-    eng = HSGD(model.loss, sgd(0.05), topo,
-               executor=MeshExecutor(make_host_mesh(group_sizes=gs)))
-    st = eng.init(jax.random.PRNGKey(0), model.init)
-    mask = np.ones(N, bool)
-    with pytest.raises(NotImplementedError, match="sim"):
-        eng.step(st, jax.tree.map(jnp.asarray, ds.batch(0, 8)), mask=mask)
     # a flat 8-replica mesh does not mirror the 2-level hierarchy
     flat = make_host_mesh(n_data=8)
     with pytest.raises((AssertionError, ValueError)):
         HSGD(model.loss, sgd(0.05), make_topology("uniform", spec=spec),
              executor=MeshExecutor(flat))
+    # a grouped topology needs n_replicas(mesh) == n workers
+    with pytest.raises(ValueError, match="worker"):
+        HSGD(model.loss, sgd(0.05), GroupedTopology(contiguous(4, 2), G=8,
+                                                    I=4),
+             executor=MeshExecutor(make_host_mesh(n_data=8)))
 
 
 @needs_devices
 def test_mesh_exact_weighted_gather(setup):
-    """gather_aggregate's docstring promise for the WEIGHTED rule: the fused
-    multiply+reduce reassociates, so exact mode agrees with sim to f32
-    rounding (not bitwise) — previously only mean/compressed/sign were
-    covered."""
+    """Exact mode for the WEIGHTED rule: the all-gather + replayed
+    ``topology.aggregate`` recomputes the sim weight combination, but the
+    fused multiply+reduce may still reassociate under a different program
+    context, so we assert f32-rounding agreement (bitwise is asserted for
+    mean/compressed/sign and the grouped/masked paths)."""
     from repro.launch.mesh import make_host_mesh
     ds, model = setup
     spec, gs = SPECS["two_level"]
@@ -321,6 +323,205 @@ def test_mesh_comms_fuses_collectives(setup):
 
 
 # ---------------------------------------------------------------------------
+# grouped topologies on the mesh (flat worker-axis lowering)
+# ---------------------------------------------------------------------------
+GROUPED = {
+    "uniform_I": lambda **kw: GroupedTopology(contiguous(N, 2), G=8, I=4,
+                                              **kw),
+    "hetero_I": lambda **kw: GroupedTopology(contiguous(N, 2), G=8,
+                                             I=(2, 4), **kw),
+    # non-uniform group sizes (Theorem 1's general setting)
+    "nonuniform": lambda **kw: GroupedTopology(
+        Grouping((0, 0, 0, 0, 0, 1, 1, 1)), G=8, I=(2, 4), **kw),
+}
+
+
+@needs_devices
+@pytest.mark.parametrize("agg", [None, "sign"], ids=["mean", "sign"])
+@pytest.mark.parametrize("name", sorted(GROUPED))
+def test_mesh_grouped_matches_sim(setup, name, agg):
+    """GroupedTopology through the production one-hot-psum lowering matches
+    sim to f32 rounding — including heterogeneous per-group periods, whose
+    partial SyncEvent(level=2, groups=...) events used to be rejected."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    mk = lambda: GROUPED[name](aggregator=agg)
+    st_sim, h_sim = trajectory(ds, model, mk(), "sim", T=16)
+    st_mesh, h_mesh = trajectory(
+        ds, model, mk(), MeshExecutor(make_host_mesh(group_sizes=(N,))),
+        T=16)
+    assert max_param_diff(st_sim.params, st_mesh.params) < 5e-6
+    for a, b in zip(h_sim, h_mesh):
+        assert abs(a["ce"] - b["ce"]) < 1e-5
+
+
+@needs_devices
+@pytest.mark.parametrize("comms", [None, "int8"], ids=["plain", "int8"])
+@pytest.mark.parametrize("name", sorted(GROUPED))
+def test_mesh_grouped_exact_is_bitwise(setup, name, comms):
+    """exact=True replays the sim segment-mean (and the comms bucket
+    reduce) on the all-gathered worker block: grouped mesh trajectories are
+    bit-identical to sim, partial-group events included."""
+    from repro.comms import Comms
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    mkc = lambda: None if comms is None else Comms(comms)
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    e1 = HSGD(model.loss, sgd(0.05), GROUPED[name](), comms=mkc())
+    s1 = e1.init(jax.random.PRNGKey(0), model.init)
+    s1, _ = e1.run_rounds(s1, bf, 16)
+    e2 = HSGD(model.loss, sgd(0.05), GROUPED[name](), comms=mkc(),
+              executor=MeshExecutor(make_host_mesh(group_sizes=(N,)),
+                                    exact=True))
+    s2 = e2.init(jax.random.PRNGKey(0), model.init)
+    s2, _ = e2.run_rounds(s2, bf, 16)
+    assert max_param_diff(s1.params, s2.params) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# masked rounds (runtime participation) on the mesh
+# ---------------------------------------------------------------------------
+MASK = np.array([1, 1, 0, 1, 1, 0, 1, 1], bool)
+
+
+def _masked_round_state(ds, model, executor, comms=None):
+    """Two warm-up rounds (residual build-up), then one elastic-drop round."""
+    eng = HSGD(model.loss, sgd(0.05),
+               make_topology("uniform", spec=HierarchySpec((2, 4), (4, 4))),
+               executor=executor, comms=comms)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    st, _ = eng.run_rounds(st, bf, 8)
+    batches = tuple(bf(t) for t in range(8, 12))
+    st, _ = eng.round_fn(Round(4, SyncEvent(level=1)), masked=True)(
+        st, batches, jnp.asarray(MASK))
+    return jax.device_get(st)
+
+
+@needs_devices
+def test_mesh_masked_round_matches_sim(setup):
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    a = _masked_round_state(ds, model, "sim")
+    b = _masked_round_state(
+        ds, model, MeshExecutor(make_host_mesh(group_sizes=(2, 4))))
+    assert max_param_diff(a.params, b.params) < 5e-6
+
+
+@needs_devices
+def test_mesh_masked_round_exact_bitwise_with_residuals(setup):
+    """THE elastic-participation contract on the mesh, bitwise: a dropped
+    worker keeps its exact post-update params, opt state AND unconsumed
+    topk error-feedback residual; admitted workers' aggregates (and
+    consumed residuals) replay the sim reduce bit-for-bit."""
+    from repro.comms import Comms
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    mkc = lambda: Comms("topk", rate=0.25)
+    a = _masked_round_state(ds, model, "sim", comms=mkc())
+    b = _masked_round_state(
+        ds, model, MeshExecutor(make_host_mesh(group_sizes=(2, 4)),
+                                exact=True), comms=mkc())
+    assert max_param_diff(a.params, b.params) == 0.0
+    assert max_param_diff(a.opt_state, b.opt_state) == 0.0
+    assert max_param_diff(a.comms, b.comms) == 0.0
+    # and the drop contract itself holds on the mesh result: dropped rows
+    # carry a residual a synced worker's round would have consumed
+    res_a, res_b = jax.tree.leaves(a.comms), jax.tree.leaves(b.comms)
+    for ra, rb in zip(res_a, res_b):
+        np.testing.assert_array_equal(np.asarray(ra)[~MASK],
+                                      np.asarray(rb)[~MASK])
+
+
+@needs_devices
+def test_mesh_masked_step_matches_sim(setup):
+    """Algorithm-1 mask semantics (HSGD.step(..., mask=...)): masked-out
+    workers contribute nothing but still receive the aggregate — now lowered
+    by the mesh backend too, bitwise in exact mode."""
+    from repro.launch.mesh import make_host_mesh
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    mask = np.array([1, 0, 1, 1, 1, 1, 0, 1], bool)
+
+    def drive(executor):
+        eng = HSGD(model.loss, sgd(0.05),
+                   make_topology("uniform", spec=spec), executor=executor)
+        st = eng.init(jax.random.PRNGKey(0), model.init)
+        for t in range(4):
+            st, _ = eng.step(st, bf(t), mask=mask)
+        return jax.device_get(st)
+
+    a = drive("sim")
+    b = drive(MeshExecutor(make_host_mesh(group_sizes=gs), exact=True))
+    c = drive(MeshExecutor(make_host_mesh(group_sizes=gs)))
+    assert max_param_diff(a.params, b.params) == 0.0
+    assert max_param_diff(a.params, c.params) < 5e-6
+
+
+@needs_devices
+def test_mesh_elastic_runtime_end_to_end(setup):
+    """run_rounds with stragglers + a deadline policy on the mesh backend:
+    the host-side clock hands both executors identical masks, so the exact
+    mesh trajectory (params AND residuals) is bitwise the sim one, and the
+    simulated accounting is backend-independent."""
+    from repro.comms import Comms
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import RuntimeModel
+    ds, model = setup
+    spec, gs = SPECS["two_level"]
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+
+    def run(executor):
+        rt = RuntimeModel(compute_s=1.0, straggler="fixed:0.25:6",
+                          policy=1.0, seed=11)
+        eng = HSGD(model.loss, sgd(0.05),
+                   make_topology("uniform", spec=spec), executor=executor,
+                   runtime=rt, comms=Comms("topk", rate=0.5))
+        st = eng.init(jax.random.PRNGKey(0), model.init)
+        st, hist = eng.run_rounds(st, bf, 16)
+        return eng, jax.device_get(st), hist
+
+    eng_s, st_s, h_s = run("sim")
+    eng_m, st_m, h_m = run(MeshExecutor(make_host_mesh(group_sizes=gs),
+                                        exact=True))
+    assert eng_m.runtime_report()["dropped"][2] > 0
+    assert max_param_diff(st_s.params, st_m.params) == 0.0
+    assert max_param_diff(st_s.comms, st_m.comms) == 0.0
+    assert [r["sim_time_s"] for r in h_s] == [r["sim_time_s"] for r in h_m]
+
+
+@needs_devices
+def test_mesh_grouped_elastic_runtime_end_to_end(setup):
+    """Theorem-2-style grouped schedules + deadline drops compose on the
+    mesh: partial-group events and runtime masks in one run, bitwise vs sim
+    in exact mode."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import RuntimeModel
+    ds, model = setup
+    bf = lambda t: jax.tree.map(jnp.asarray, ds.batch(t, 8))
+    mk = lambda: GroupedTopology(contiguous(N, 2), G=8, I=(2, 4))
+    rt = lambda: RuntimeModel(compute_s=1.0, straggler="lognormal:0.9",
+                              policy=0.25, seed=4)
+
+    def run(executor):
+        eng = HSGD(model.loss, sgd(0.05), mk(), executor=executor,
+                   runtime=rt())
+        st = eng.init(jax.random.PRNGKey(0), model.init)
+        st, hist = eng.run_rounds(st, bf, 16)
+        return eng, jax.device_get(st), hist
+
+    eng_s, st_s, h_s = run("sim")
+    eng_m, st_m, h_m = run(MeshExecutor(make_host_mesh(group_sizes=(N,)),
+                                        exact=True))
+    assert sum(eng_m.runtime_report()["dropped"].values()) > 0
+    assert max_param_diff(st_s.params, st_m.params) == 0.0
+    # the ce METRIC reduces in a different order on mesh (per-shard mean +
+    # pmean), so it matches to rounding, not bitwise
+    assert all(abs(a["ce"] - b["ce"]) < 1e-5 for a, b in zip(h_s, h_m))
+
+
+# ---------------------------------------------------------------------------
 # subprocess: the equivalence suite on a forced 8-device host platform, so
 # plain single-device `pytest -q` runs still exercise the mesh backend
 # ---------------------------------------------------------------------------
@@ -370,6 +571,36 @@ for gs, periods in [((2, 4), (8, 4)), ((2, 2, 2), (8, 4, 2))]:
                                       exact=True), comms=Comms("int8"))
     d_comms = diff(s_csim.params, s_cexact.params)
     assert d_comms == 0.0, (gs, d_comms)
+
+# grouped topology (flat worker-axis lowering, partial level-2 events) and
+# deadline-elastic drops: mesh parity for the scenarios that used to be
+# rejected at construction
+from repro.core import GroupedTopology, contiguous
+from repro.runtime import RuntimeModel
+
+mkg = lambda: GroupedTopology(contiguous(8, 2), G=8, I=(2, 4))
+s_gsim = run(mkg(), "sim")
+s_gpm = run(mkg(), MeshExecutor(make_host_mesh(group_sizes=(8,))))
+s_gex = run(mkg(), MeshExecutor(make_host_mesh(group_sizes=(8,)),
+                                exact=True))
+assert diff(s_gsim.params, s_gpm.params) < 5e-6
+assert diff(s_gsim.params, s_gex.params) == 0.0
+
+def run_elastic(executor):
+    rt = RuntimeModel(compute_s=1.0, straggler="fixed:0.25:6", policy=1.0,
+                      seed=11)
+    eng = HSGD(model.loss, sgd(0.05),
+               make_topology("uniform", spec=HierarchySpec((2, 4), (8, 2))),
+               executor=executor, runtime=rt)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, _ = eng.run_rounds(st, batch_fn, 16)
+    assert sum(eng.runtime_report()["dropped"].values()) > 0
+    return st
+
+s_esim = run_elastic("sim")
+s_eex = run_elastic(MeshExecutor(make_host_mesh(group_sizes=(2, 4)),
+                                 exact=True))
+assert diff(s_esim.params, s_eex.params) == 0.0
 print("MESH_EQUIV_OK")
 """
 

@@ -58,6 +58,14 @@ def bench_one(ds, model, spec: HierarchySpec, comms, T: int,
     ws = eng.wire_stats(state)
     if ws is not None:
         rec.update(ws.summary(T))
+    # static audit of the LOWERED sync programs (repro.analysis): the
+    # O(dtypes)-vs-O(leaves) claim per sync level, asserted at generation
+    # time against the schedule prediction — a jaxpr walk, not wall-clock
+    audit = eng.audit(state)
+    rec["sync_ops"] = {k: ev.sync_ops for k, ev in audit.events.items()}
+    for ev in audit.events.values():
+        assert ev.sync_ops == ev.expected_sync_ops, \
+            f"lowered sync op count drifted: {ev}"
     if measure:
         rec["steps_per_sec"] = round(
             steps_per_sec(ds, model, make_topology("uniform", spec=spec),

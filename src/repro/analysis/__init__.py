@@ -1,0 +1,34 @@
+"""repro.analysis — the collective auditor & sync-plan linter.
+
+A static pass over the engine's LOWERED programs: the walker
+(:mod:`.walker`) turns any jaxpr into plain op records; the engine
+(:mod:`.engine`) traces a live :class:`~repro.core.hsgd.HSGD` into a
+:class:`~repro.analysis.report.SyncPlanReport`; the rules (:mod:`.rules`)
+lint the report (R1 sync-op count, R2 wire-dtype honesty, R3 host-free
+round body, R4 retrace detection, R5 wire-accounting cross-check); the
+budget (:mod:`.budget`) diffs reports against the committed
+``ANALYSIS_budget.json`` so CI fails on new collectives, dtype upcasts or
+byte growth.  Entry points: ``eng.audit(state, batch_fn)`` and
+``python -m repro.analysis --check`` (see README.md "Static analysis" and
+DESIGN.md "Analysis layer").
+"""
+from repro.analysis.budget import (BUDGET_FILE, check_reports, diff_entry,
+                                   entry_from_report, load_budget,
+                                   save_budget, update_budget, waivers_for)
+from repro.analysis.engine import audit_engine, event_key, round_key
+from repro.analysis.report import (EventAudit, Finding, RoundAudit,
+                                   SyncPlanReport)
+from repro.analysis.rules import RULES, run_rules
+from repro.analysis.walker import (CALLBACK_PRIMS, COLLECTIVE_PRIMS,
+                                   REDUCE_PRIMS, TRANSFER_PRIMS, JaxprSummary,
+                                   OpRecord, fingerprint, trace, walk)
+
+__all__ = [
+    "walk", "trace", "fingerprint", "JaxprSummary", "OpRecord",
+    "COLLECTIVE_PRIMS", "CALLBACK_PRIMS", "TRANSFER_PRIMS", "REDUCE_PRIMS",
+    "EventAudit", "RoundAudit", "Finding", "SyncPlanReport",
+    "RULES", "run_rules",
+    "audit_engine", "event_key", "round_key",
+    "BUDGET_FILE", "load_budget", "save_budget", "waivers_for",
+    "entry_from_report", "diff_entry", "check_reports", "update_budget",
+]

@@ -1,0 +1,163 @@
+"""``python -m repro.analysis`` — audit the reference configs and gate on
+the committed budget.
+
+The config matrix is small but deliberately spans every lowering path the
+rules distinguish: sim and mesh executors, two- and three-level schedules,
+comms off / identity / compressing (int8), a momentum run (optimizer
+moments on the wire) and the mesh ``exact=True`` replay.  Mesh configs need
+one device per worker (8); on fewer devices they are skipped — their budget
+entries survive ``--update`` untouched, which is how one budget file serves
+both CI legs.
+
+    python -m repro.analysis                 # print the audit summaries
+    python -m repro.analysis --check         # diff vs ANALYSIS_budget.json
+    python -m repro.analysis --update        # re-pin the budget (merge)
+    python -m repro.analysis --out r.json    # dump the full reports as JSON
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from fnmatch import fnmatch
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (BUDGET_FILE, audit_engine, check_reports,
+                            load_budget, save_budget, update_budget,
+                            waivers_for)
+
+ROOT = Path(__file__).resolve().parents[3]
+
+# one global period: two_level = (8 workers) 2 pods x 4, sync L2 every 4
+# steps, L1 every 8; three_level adds an L3 sync every 2
+_SPECS = {
+    "two_level": ((2, 4), (8, 4)),
+    "three_level": ((2, 2, 2), (8, 4, 2)),
+}
+
+# name -> (spec, executor, comms, optimizer)
+CONFIGS = {
+    "sim/two_level/off": ("two_level", "sim", None, "sgd"),
+    "sim/two_level/identity": ("two_level", "sim", "identity", "sgd"),
+    "sim/two_level/int8": ("two_level", "sim", "int8", "sgd"),
+    "sim/two_level/momentum-int8": ("two_level", "sim", "int8", "momentum"),
+    "sim/three_level/off": ("three_level", "sim", None, "sgd"),
+    "sim/three_level/int8": ("three_level", "sim", "int8", "sgd"),
+    "mesh/two_level/off": ("two_level", "mesh", None, "sgd"),
+    "mesh/two_level/identity": ("two_level", "mesh", "identity", "sgd"),
+    "mesh/two_level/int8": ("two_level", "mesh", "int8", "sgd"),
+    "mesh/two_level/exact-off": ("two_level", "mesh-exact", None, "sgd"),
+}
+
+
+def build_engine(config: str):
+    """(engine, state, batch_fn) for one matrix entry — a tiny MLP so the
+    whole audit is tracing, not training."""
+    from repro.core.executors import MeshExecutor
+    from repro.core.hsgd import HSGD
+    from repro.core.topology import HierarchySpec, make_topology
+    from repro.models.simple import SimpleConfig, SimpleModel
+    from repro.optim.optimizers import momentum, sgd
+
+    spec_name, executor, comms, opt_name = CONFIGS[config]
+    sizes, periods = _SPECS[spec_name]
+    topo = make_topology("uniform", spec=HierarchySpec(sizes, periods))
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=8,
+                                     num_classes=4))
+    if executor == "mesh-exact":
+        executor = MeshExecutor(exact=True)
+    opt = momentum(0.1) if opt_name == "momentum" else sgd(0.1)
+    eng = HSGD(model.loss, opt, topo, executor=executor, comms=comms)
+    state = eng.init(jax.random.PRNGKey(0), model.init)
+    n = topo.n
+
+    def batch_fn(t):
+        x = jax.random.normal(jax.random.PRNGKey(t), (n, 4, 16))
+        y = jnp.zeros((n, 4), jnp.int32)
+        return {"x": x, "y": y}
+
+    return eng, state, batch_fn
+
+
+def runnable(config: str) -> bool:
+    if not config.startswith("mesh/"):
+        return True
+    sizes, _ = _SPECS[CONFIGS[config][0]]
+    n = 1
+    for s in sizes:
+        n *= s
+    return len(jax.devices()) >= n
+
+
+def run_audits(budget, patterns):
+    reports, skipped = [], []
+    for config in CONFIGS:
+        if patterns and not any(fnmatch(config, p) for p in patterns):
+            continue
+        if not runnable(config):
+            skipped.append(config)
+            continue
+        eng, state, batch_fn = build_engine(config)
+        reports.append(audit_engine(eng, state, batch_fn, config=config,
+                                    waivers=waivers_for(budget, config)))
+    return reports, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="collective audit of the reference engine configs")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on any budget regression")
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin the audited configs in the budget (merge)")
+    ap.add_argument("--budget", default=str(ROOT / BUDGET_FILE),
+                    help=f"budget path (default: repo-root {BUDGET_FILE})")
+    ap.add_argument("--out", default=None,
+                    help="also write the full SyncPlanReport JSON here")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated fnmatch filters (default: all)")
+    args = ap.parse_args(argv)
+
+    budget = load_budget(args.budget)
+    patterns = [p for p in args.configs.split(",") if p]
+    reports, skipped = run_audits(budget, patterns)
+
+    for report in reports:
+        print(report.summary())
+    if skipped:
+        print(f"skipped (need more devices, budget entries kept): "
+              f"{', '.join(skipped)}")
+
+    if args.out:
+        payload = {"device_count": len(jax.devices()),
+                   "skipped": skipped,
+                   "configs": {r.config: r.to_dict() for r in reports}}
+        Path(args.out).write_text(json.dumps(payload, indent=2) + "\n",
+                                  encoding="utf-8")
+        print(f"wrote {args.out}")
+
+    if args.update:
+        save_budget(args.budget, update_budget(budget, reports))
+        print(f"budget updated: {args.budget}")
+        return 0
+
+    regs, imps = check_reports(reports, budget)
+    for msg in imps:
+        print(f"IMPROVED  {msg}  (re-pin with --update)")
+    for msg in regs:
+        print(f"REGRESSED {msg}")
+    if args.check and regs:
+        print(f"collective audit: {len(regs)} regression(s)")
+        return 1
+    if args.check:
+        print(f"collective audit: OK ({len(reports)} config(s), "
+              f"{len(imps)} improvement note(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""The lint rules over a :class:`~repro.analysis.report.SyncPlanReport`.
+
+Each rule is a pure function ``rule(report) -> [Finding]`` operating on the
+report's plain data — never on live jaxprs — so every rule is testable from
+a hand-built report fixture.  The catalog (mirrored in DESIGN.md):
+
+* **R1 sync-op count** — each event's lowered sync-op count must equal the
+  schedule-derived expectation: ``buckets × encode-keys`` with comms on
+  (O(dtypes)), ``leaves × encode-keys`` without (O(leaves)).  Skipped when
+  no exact prediction exists (grouped topology, weighted aggregator,
+  ``exact=True``) — those configs are pinned by the budget diff instead.
+* **R2 no-f32-on-the-wire** — with a *compressing* codec active, the
+  lowered sync ops must not reduce float32.  Today the
+  encode→reduce(f32)→decode path FIRES this on every compressing config:
+  the payload is decoded BEFORE the reduction, so the declared compression
+  never reaches the wire.  Recorded as a baseline-waived known finding that
+  the compressed-allreduce ROADMAP item burns down — the waiver, not the
+  rule, is what that PR deletes.
+* **R3 host-free round body** — no host callbacks (``debug_callback``,
+  ``pure_callback``, ``io_callback``) or device transfers inside a traced
+  round program: one round must stay one device program.
+* **R4 retrace detection** — each Round signature compiles exactly once
+  across ``run_rounds``: the executor's round cache returns a stable
+  callable and the jit cache holds at most one variant per signature.
+* **R5 wire-accounting cross-check** — the per-worker elements the lowered
+  sync ops consume must equal the static ``WireStats`` element count:
+  accounting (what history's ``wire_bytes`` reports) may not drift from
+  reality (what the program moves).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Mapping
+
+from repro.analysis.report import Finding, SyncPlanReport
+
+
+def rule_r1_sync_op_count(report: SyncPlanReport) -> List[Finding]:
+    out = []
+    for key, ev in sorted(report.events.items()):
+        if ev.expected_sync_ops is None:
+            continue
+        if ev.sync_ops != ev.expected_sync_ops:
+            out.append(Finding(
+                "R1", key,
+                f"lowered sync has {ev.sync_ops} aggregation op(s), "
+                f"schedule predicts {ev.expected_sync_ops}"))
+    return out
+
+
+def rule_r2_wire_dtypes(report: SyncPlanReport) -> List[Finding]:
+    if report.codec in (None, "identity"):
+        return []
+    out = []
+    for key, ev in sorted(report.events.items()):
+        if "float32" in ev.wire_dtypes:
+            out.append(Finding(
+                "R2", key,
+                f"compressing codec '{report.codec}' is active but the "
+                f"lowered sync reduces float32 — the encode→reduce→decode "
+                f"path decodes BEFORE the reduction, so compression never "
+                f"reaches the wire"))
+    return out
+
+
+def rule_r3_host_free(report: SyncPlanReport) -> List[Finding]:
+    out = []
+    for key, rnd in sorted(report.rounds.items()):
+        for kind, ops in (("host callback", rnd.callbacks),
+                          ("device transfer", rnd.transfers)):
+            for op in ops:
+                out.append(Finding(
+                    "R3", key, f"{kind} '{op}' inside the round body"))
+    return out
+
+
+def rule_r4_retrace(report: SyncPlanReport) -> List[Finding]:
+    out = []
+    for key, rnd in sorted(report.rounds.items()):
+        if not rnd.cache_stable:
+            out.append(Finding(
+                "R4", key,
+                "executor round cache returned a different callable for an "
+                "equal Round signature"))
+        if rnd.jit_cache_size is not None and rnd.jit_cache_size > 1:
+            out.append(Finding(
+                "R4", key,
+                f"round signature traced {rnd.jit_cache_size} times across "
+                f"run_rounds (expected once)"))
+    return out
+
+
+def rule_r5_wire_accounting(report: SyncPlanReport) -> List[Finding]:
+    out = []
+    for key, ev in sorted(report.events.items()):
+        if ev.expected_payload_elements is None:
+            continue
+        if ev.payload_elements != ev.expected_payload_elements:
+            out.append(Finding(
+                "R5", key,
+                f"lowered sync consumes {ev.payload_elements} elements/worker "
+                f"but WireStats accounts {ev.expected_payload_elements} — "
+                f"static accounting drifted from the lowered program"))
+    return out
+
+
+RULES: Dict[str, Callable[[SyncPlanReport], List[Finding]]] = {
+    "R1": rule_r1_sync_op_count,
+    "R2": rule_r2_wire_dtypes,
+    "R3": rule_r3_host_free,
+    "R4": rule_r4_retrace,
+    "R5": rule_r5_wire_accounting,
+}
+
+
+def run_rules(report: SyncPlanReport,
+              waivers: Mapping[str, str] = ()) -> List[Finding]:
+    """Run every rule; mark findings whose rule id appears in ``waivers``
+    (``{rule_id: reason}``) as waived rather than dropping them — a waived
+    finding stays visible in the report and the budget, it just does not
+    fail a check."""
+    waivers = dict(waivers or {})
+    findings: List[Finding] = []
+    for rule_id, rule in RULES.items():
+        for f in rule(report):
+            if rule_id in waivers:
+                f = Finding(f.rule, f.subject, f.message, waived=True,
+                            waive_reason=waivers[rule_id])
+            findings.append(f)
+    return findings

@@ -65,6 +65,13 @@ class WireStats:
         return 4 * self.n_elements
 
     @property
+    def wire_dtypes(self) -> Tuple[str, ...]:
+        """Sorted distinct dtypes of the declared wire payload — what the
+        codec CLAIMS goes on the wire.  The analysis layer's R2 rule compares
+        this against the dtypes the lowered collectives actually move."""
+        return tuple(sorted({jnp.dtype(a.dtype).name for a in self.payload}))
+
+    @property
     def compression_ratio(self) -> float:
         return self.f32_bytes / max(self.payload_bytes, 1)
 

@@ -188,6 +188,17 @@ def flat_worker_index(axis_names, sizes) -> jax.Array:
 
 
 
+def denominator_floor(acc) -> jax.Array:
+    """Positive floor for weighted-mean denominators, in the accumulation
+    dtype: the dtype's smallest positive normal.  A literal ``1e-9``
+    underflows to 0 in half-precision accumulation (f16/bf16 tiny is
+    ~6e-5/~1e-38 but 1e-9 rounds to 0 in f16), so an all-masked group would
+    divide 0/0 = NaN; ``tiny`` keeps the quotient an exact 0 in every float
+    dtype while never perturbing a real weight sum (any participating
+    worker's weight dwarfs it)."""
+    return jnp.asarray(jnp.finfo(jnp.dtype(acc)).tiny, acc)
+
+
 def axis_weighted_mean(v: jax.Array, w: Optional[jax.Array], axes, acc) -> Any:
     """Mean of ``v`` over ``axes`` (keepdims), optionally weighted by ``w``
     (broadcastable); accumulation pinned to ``acc`` so a bf16 payload stays
@@ -195,7 +206,8 @@ def axis_weighted_mean(v: jax.Array, w: Optional[jax.Array], axes, acc) -> Any:
     if w is None:
         return v.astype(acc).mean(axis=axes, keepdims=True, dtype=acc)
     num = (v.astype(acc) * w).sum(axis=axes, keepdims=True, dtype=acc)
-    den = jnp.maximum(w.sum(axis=axes, keepdims=True, dtype=acc), 1e-9)
+    den = jnp.maximum(w.sum(axis=axes, keepdims=True, dtype=acc),
+                      denominator_floor(acc))
     return num / den
 
 
@@ -210,7 +222,7 @@ def named_axis_weighted_mean(v: jax.Array, w: Optional[jax.Array],
         return jax.lax.pmean(v.astype(acc), axis_names)
     w = jnp.asarray(w, acc).reshape(())
     num = jax.lax.psum(v.astype(acc) * w, axis_names)
-    den = jnp.maximum(jax.lax.psum(w, axis_names), 1e-9)
+    den = jnp.maximum(jax.lax.psum(w, axis_names), denominator_floor(acc))
     return num / den
 
 
@@ -221,5 +233,5 @@ def segment_weighted_mean(v: jax.Array, w: jax.Array,
     v: (n, dim) payload; w: (n,) weights; membership: (N, n) one-hot.
     Returns (N, dim) group means."""
     num = membership @ (w[:, None] * v.astype(acc))
-    den = jnp.maximum(membership @ w, 1e-9)[:, None]
+    den = jnp.maximum(membership @ w, denominator_floor(acc))[:, None]
     return num / den

@@ -95,6 +95,38 @@ class Executor(abc.ABC):
     def _build_round(self, rnd: Round, masked: bool = False):
         ...
 
+    # -- static-analysis surface (repro.analysis) ----------------------------
+    @abc.abstractmethod
+    def sync_fn(self, event: SyncEvent):
+        """The UNcompiled aggregation subprogram one sync event embeds in
+        every round body: ``(params, opt_state, cstate, mask=None) ->
+        (params, opt_state, cstate)``.  This is the exact reduce path
+        ``round_fn`` lowers (same closure, same collectives) exposed in
+        isolation, so the analysis layer can trace WHAT an event ships
+        without the local-update noise around it."""
+
+    def sync_jaxpr(self, event: SyncEvent, state: HSGDState, mask=None):
+        """ClosedJaxpr of :meth:`sync_fn` against ``state``'s shapes — the
+        trace target of the ``repro.analysis`` walker (rules R1/R2/R5)."""
+        fn = self.sync_fn(event)
+        if mask is None:
+            return jax.make_jaxpr(lambda p, o, c: fn(p, o, c))(
+                state.params, state.opt_state, state.comms)
+        return jax.make_jaxpr(lambda p, o, c, m: fn(p, o, c, mask=m))(
+            state.params, state.opt_state, state.comms, jnp.asarray(mask))
+
+    def round_jaxpr(self, rnd: Round, state: HSGDState, batches, mask=None):
+        """ClosedJaxpr of the compiled round body for one ``Round``
+        signature — the same cached function ``run_rounds`` dispatches
+        (tracing it here warms nothing and compiles nothing), walked by
+        ``repro.analysis`` for rules R3/R4 and the per-round collective
+        budget."""
+        fn = self.round_fn(rnd, masked=mask is not None)
+        if mask is None:
+            return jax.make_jaxpr(lambda s, b: fn(s, b))(state, batches)
+        return jax.make_jaxpr(lambda s, b, m: fn(s, b, m))(
+            state, batches, jnp.asarray(mask))
+
 
 def _apply_sync(plan, reduce_fn, params, opt_state, cstate):
     """Shared sync dispatch for both executors: apply ``reduce_fn`` (the
@@ -204,6 +236,12 @@ class SimExecutor(Executor):
                 new_c = _keep_rows(jnp.asarray(mask).astype(bool),
                                    new_c, cstate)
         return new_p, new_o, new_c
+
+    def sync_fn(self, event: SyncEvent):
+        def sync(params, opt_state, cstate, mask=None):
+            return self._apply_event(params, opt_state, cstate, event,
+                                     mask=mask)
+        return sync
 
     # -- one combined step per event ------------------------------------------
     def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
@@ -359,33 +397,18 @@ class MeshExecutor(Executor):
         from repro.launch.partitioning import worker_axis_spec
         return worker_axis_spec(self.rep_axes, ndim, lead_axis)
 
-    # -- the shard_mapped round body ----------------------------------------
-    def _round_core(self, event: Optional[SyncEvent], masked: bool = False,
-                    drop: bool = False):
-        """(params, opt_state, comms_state, stacked_batches[, mask]) ->
-        (params, opt_state, comms_state, metrics) with the local scan and
-        the event collective under one shard_map; each shard holds exactly
-        one worker.  The round length is carried by the stacked batch's
-        leading axis.
-
-        With a comms plan bound, each shard fuses its ``(1, ...)`` leaves
-        into flat per-dtype buffers, codec-roundtrips them (error-feedback
-        residuals are sharded like params), and the named-axis collective
-        runs once per BUFFER — O(dtypes) pmeans per sync in the lowered
-        program instead of O(leaves).
-
-        ``masked=True`` threads a replicated (n,) runtime mask into the
-        body; each shard folds its own mask entry into the collective's
-        weight (mirroring ``Topology._event_weights``) and row-selects its
-        state afterwards.  ``drop`` picks between the two mask semantics —
-        see the class docstring."""
-        plan, mesh, rep = self.plan, self.mesh, self.rep_axes
+    # -- the per-shard sync body (shared: round core + analysis trace) ------
+    def _event_applier(self, event: SyncEvent, drop: bool = False):
+        """Per-shard sync body for one event: ``(params, opt_state, cstate,
+        mask, widx) -> (params, opt_state, cstate)``.  Extracted from the
+        round core so :meth:`sync_fn` can wrap the IDENTICAL closure in its
+        own shard_map — the audited sync program and the round body can
+        never drift apart."""
+        plan, rep = self.plan, self.rep_axes
         topo = plan.topology
-        vupdate = jax.vmap(plan.local_update_fn())
-        sizes = tuple(mesh.shape[a] for a in rep)
         acc = topo.aggregator.accum_dtype
-        wvec = topo._event_weights(event, None) if event is not None else None
-        part = topo.participants(event) if event is not None else None
+        wvec = topo._event_weights(event, None)
+        part = topo.participants(event)
 
         def apply_event(params, opt_state, cstate, mask, widx):
             if self.exact:
@@ -432,6 +455,62 @@ class MeshExecutor(Executor):
                 if cstate is not None:
                     new_c = _keep_shard(keep, new_c, cstate)
             return new_p, new_o, new_c
+
+        return apply_event
+
+    def sync_fn(self, event: SyncEvent):
+        plan, mesh, rep = self.plan, self.mesh, self.rep_axes
+        sizes = tuple(mesh.shape[a] for a in rep)
+        applier = self._event_applier(event)
+
+        def shard_body(params, opt_state, cstate, mask):
+            widx = flat_worker_index(rep, sizes)
+            return applier(params, opt_state, cstate, mask, widx)
+
+        def sync(params, opt_state, cstate, mask=None):
+            pspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), params)
+            ospec = jax.tree.map(lambda x: self._lead_spec(x.ndim), opt_state)
+            cspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), cstate)
+            # same check_rep policy as the round core (see _round_core)
+            kw = dict(check_rep=False) \
+                if (plan.comms is not None or mask is not None) else {}
+            if mask is None:
+                fn = shard_map(lambda p, o, c: shard_body(p, o, c, None),
+                               mesh=mesh, in_specs=(pspec, ospec, cspec),
+                               out_specs=(pspec, ospec, cspec), **kw)
+                return fn(params, opt_state, cstate)
+            fn = shard_map(lambda p, o, c, m: shard_body(p, o, c, m),
+                           mesh=mesh, in_specs=(pspec, ospec, cspec, P()),
+                           out_specs=(pspec, ospec, cspec), **kw)
+            return fn(params, opt_state, cstate, jnp.asarray(mask))
+
+        return sync
+
+    # -- the shard_mapped round body ----------------------------------------
+    def _round_core(self, event: Optional[SyncEvent], masked: bool = False,
+                    drop: bool = False):
+        """(params, opt_state, comms_state, stacked_batches[, mask]) ->
+        (params, opt_state, comms_state, metrics) with the local scan and
+        the event collective under one shard_map; each shard holds exactly
+        one worker.  The round length is carried by the stacked batch's
+        leading axis.
+
+        With a comms plan bound, each shard fuses its ``(1, ...)`` leaves
+        into flat per-dtype buffers, codec-roundtrips them (error-feedback
+        residuals are sharded like params), and the named-axis collective
+        runs once per BUFFER — O(dtypes) pmeans per sync in the lowered
+        program instead of O(leaves).
+
+        ``masked=True`` threads a replicated (n,) runtime mask into the
+        body; each shard folds its own mask entry into the collective's
+        weight (mirroring ``Topology._event_weights``) and row-selects its
+        state afterwards.  ``drop`` picks between the two mask semantics —
+        see the class docstring."""
+        plan, mesh, rep = self.plan, self.mesh, self.rep_axes
+        vupdate = jax.vmap(plan.local_update_fn())
+        sizes = tuple(mesh.shape[a] for a in rep)
+        apply_event = self._event_applier(event, drop=drop) \
+            if event is not None else None
 
         def body(params, opt_state, cstate, stacked, mask):
             # per-shard shapes: leading worker axis == 1

@@ -318,6 +318,18 @@ class HSGD:
             n_elements += n
         return WireStats(self.topology, tuple(payload), n_elements)
 
+    def audit(self, state: HSGDState, batch_fn: Optional[Callable] = None,
+              *, T: Optional[int] = None, config: str = "", waivers=()):
+        """Static audit of this engine's lowered sync plan
+        (:func:`repro.analysis.audit_engine`): traces every distinct
+        SyncEvent's aggregation subprogram — and, with ``batch_fn``, every
+        distinct Round's fused program — over one global period (or ``T``
+        steps) and lints the result (rule catalog in DESIGN.md "Analysis
+        layer").  Returns a :class:`~repro.analysis.SyncPlanReport`."""
+        from repro.analysis import audit_engine
+        return audit_engine(self, state, batch_fn, T=T, config=config,
+                            waivers=waivers)
+
     def _payload_nbytes(self, state: HSGDState) -> int:
         """Per-worker bytes ONE sync payload puts on the wire — the encoded
         codec payload with comms on (so compression buys simulated time),

@@ -28,8 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregators import (Aggregator, AggregatorLike,
-                                    axis_weighted_mean, make_aggregator,
-                                    segment_weighted_mean)
+                                    axis_weighted_mean, denominator_floor,
+                                    make_aggregator, segment_weighted_mean)
 from repro.core.grouping import Grouping, contiguous
 from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
 
@@ -304,7 +304,8 @@ class GroupedTopology(Topology):
         col = jax.nn.one_hot(gid, N, dtype=acc)               # my (N,) column
         w = jnp.asarray(1.0, acc) if weight is None \
             else jnp.asarray(weight, acc).reshape(())
-        den = jnp.maximum(jax.lax.psum(col * w, axes), 1e-9)  # (N,)
+        den = jnp.maximum(jax.lax.psum(col * w, axes),
+                          denominator_floor(acc))              # (N,)
         flat = x.reshape(x.shape[0], -1)                      # (1, dim)
         payloads = agg.encode(flat)
         means = {}

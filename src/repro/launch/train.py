@@ -108,6 +108,11 @@ def build_argparser():
                     help="straggler sampler seed (draws are pure in "
                          "(seed, step): policies compare on identical "
                          "compute times)")
+    ap.add_argument("--audit", action="store_true",
+                    help="print the repro.analysis collective audit of the "
+                         "lowered sync plan (per-event sync ops, wire "
+                         "dtypes, payload bytes, lint findings) before "
+                         "training starts")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -185,6 +190,10 @@ def main(argv=None):
     eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend),
                comms=comms, runtime=runtime)
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
+    if args.audit:
+        # sync-subprogram audit only (no batch_fn): fast, and enough for
+        # the per-event sync-op/dtype/byte summary + R1/R2/R5 lints
+        print(eng.audit(state, config=f"{args.backend}/{args.arch}").summary())
     if comms is not None:
         # static per-level wire accounting: what each sync event moves
         print(json.dumps({"wire": eng.wire_stats(state).summary(args.steps)}))

@@ -266,7 +266,8 @@ def test_identity_bucket_is_bitwise(setup):
 def test_sync_operand_count_is_o_dtypes(setup):
     """The jaxpr of the fused aggregation shows O(dtypes) sync reductions
     instead of O(leaves) — the FlatBucket claim, verified on the lowered
-    program (not wall-clock)."""
+    program (not wall-clock) via the repro.analysis walker."""
+    from repro.analysis import trace
     ds, model = setup
     topo = make_topology("uniform", spec=HierarchySpec((2, 4), (8, 4)))
     params = jax.tree.map(
@@ -276,14 +277,12 @@ def test_sync_operand_count_is_o_dtypes(setup):
     assert n_leaves >= 4
     ev = SyncEvent(level=1)
 
-    plain = jax.make_jaxpr(lambda t: topo.aggregate(t, ev))(params)
     comms = Comms()
-    fused = jax.make_jaxpr(
-        lambda t: comms.sync(t, lambda b: topo.aggregate(b, ev))[0])(params)
-    n_plain = str(plain).count("reduce_sum")
-    n_fused = str(fused).count("reduce_sum")
-    assert n_plain == n_leaves
-    assert n_fused == 1  # one f32 bucket
+    plain = trace(lambda t: topo.aggregate(t, ev), params)
+    fused = trace(
+        lambda t: comms.sync(t, lambda b: topo.aggregate(b, ev))[0], params)
+    assert plain.count("reduce_sum") == n_leaves
+    assert fused.count("reduce_sum") == 1  # one f32 bucket
 
 
 def test_int8_comms_trains(setup):

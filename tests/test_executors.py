@@ -299,8 +299,10 @@ def test_mesh_comms_exact_is_bitwise(setup, spec_name, comms):
 @needs_devices
 def test_mesh_comms_fuses_collectives(setup):
     """The lowered mesh round syncs O(dtypes) fused buffers, not O(leaves)
-    arrays: psum count in the jaxpr drops to 1 bucket + 1 metrics pmean
-    (the no-regression check is a jaxpr diff, not wall-clock)."""
+    arrays: the collective count drops to 1 bucket + 1 metrics pmean (the
+    no-regression check is a jaxpr walk via repro.analysis, not wall-clock
+    and not substring counting)."""
+    from repro.analysis import walk
     from repro.comms import Comms
     from repro.core.hsgd import Round
     from repro.launch.mesh import make_host_mesh
@@ -314,9 +316,9 @@ def test_mesh_comms_fuses_collectives(setup):
                    make_topology("uniform", spec=spec), comms=comms,
                    executor=MeshExecutor(make_host_mesh(group_sizes=gs)))
         st = eng.init(jax.random.PRNGKey(0), model.init)
-        rf = eng.executor._build_round(Round(4, SyncEvent(level=1)))
-        jaxpr = str(jax.make_jaxpr(rf)(st, batches))
-        counts[comms is None] = jaxpr.count("psum")
+        rnd = Round(4, SyncEvent(level=1))
+        summary = walk(eng.executor.round_jaxpr(rnd, st, batches))
+        counts[comms is None] = summary.collective_count
     n_leaves = len(jax.tree.leaves(model.init(jax.random.PRNGKey(0))))
     assert counts[True] == n_leaves + 1   # leaf-wise syncs + metrics pmean
     assert counts[False] == 1 + 1         # one f32 bucket + metrics pmean

@@ -358,3 +358,53 @@ def test_grouped_topology_size_weighted_global():
         np.testing.assert_allclose(np.asarray(out[a == i]),
                                    np.tile(np.asarray(x[a == i]).mean(0),
                                            (sum(a == i), 1)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# denominator guards (accumulation-dtype-aware)
+# ---------------------------------------------------------------------------
+def test_denominator_guard_survives_half_precision_all_masked():
+    """The weighted-mean denominator floor must live in the ACCUMULATION
+    dtype: the old literal ``1e-9`` underflows to 0 in f16 accumulation, so
+    an all-masked group divided 0/0 = NaN.  With ``denominator_floor`` the
+    quotient is an exact, finite 0 in every accumulation dtype."""
+    from repro.core.aggregators import (axis_weighted_mean, denominator_floor,
+                                        named_axis_weighted_mean,
+                                        segment_weighted_mean)
+    # the bug being fixed: the old guard is literally zero in f16
+    assert float(jnp.asarray(1e-9, jnp.float16)) == 0.0
+    for acc in (jnp.float16, jnp.bfloat16, jnp.float32):
+        assert float(denominator_floor(acc)) > 0.0
+
+    v = jnp.ones((4, 3), jnp.float16)
+    w = jnp.zeros((4, 1), jnp.float16)          # every worker masked out
+    out = axis_weighted_mean(v, w, (0,), jnp.float16)
+    assert np.isfinite(np.asarray(out, jnp.float32)).all()
+
+    membership = jnp.asarray(np.eye(2).repeat(2, axis=1), jnp.float16)
+    out = segment_weighted_mean(v, jnp.zeros((4,), jnp.float16), membership,
+                                jnp.float16)
+    assert np.isfinite(np.asarray(out, jnp.float32)).all()
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    f = shard_map(
+        lambda vv, ww: named_axis_weighted_mean(vv, ww[0], ("x",),
+                                                jnp.float16),
+        mesh=mesh, in_specs=(P("x"), P("x")), out_specs=P("x"),
+        check_rep=False)
+    out = f(jnp.ones((1, 3), jnp.float16), jnp.zeros((1,), jnp.float16))
+    assert np.isfinite(np.asarray(out, jnp.float32)).all()
+
+
+def test_denominator_guard_keeps_f32_weighted_means_exact():
+    """For real (nonzero) f32 weight sums the floor never engages, so the
+    fix is bitwise-invisible to every existing weighted trajectory."""
+    from repro.core.aggregators import axis_weighted_mean
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(8, 5)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(8, 1)), jnp.float32)
+    got = axis_weighted_mean(v, w, (0,), jnp.float32)
+    want = (v * w).sum(0, keepdims=True) / w.sum(0, keepdims=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -13,9 +13,23 @@ sign / topk) on a 2-level and a 3-level hierarchy it reports
 Emits ``BENCH_comms.json`` (schema: {topology: {codec: record}}) — the CI
 smoke step runs ``--smoke`` and uploads it as an artifact, so the numbers
 regenerate on every push and bit-rot fails CI.  The byte ratios are
-asserted (they are static — no timing noise); throughput is reported only.
+asserted (they are static — no timing noise); per-codec throughput inside
+the codec records is reported only.
 
-    PYTHONPATH=src python benchmarks/bench_comms.py [--smoke] [--out PATH]
+``--wall-clock`` adds a timed leg on the two-level hierarchy, recorded
+under ``wall_clock`` in the JSON: interleaved steps/sec per codec x
+backend including the legacy ``wire_reduce=False`` (encode -> reduce
+decoded f32 -> decode) lowering of the compressing codecs, plus an
+isolated many-iteration timing of each codec's jitted sync.  Two bounds
+are asserted at generation time, each on the measurement where its margin
+beats this box's ~20% throughput jitter: the identity codec lands within
+5% of comms-off on the best same-rep steps/sec pairing (back-to-back runs
+share machine state), and the int8/sign compressed collectives beat their
+own legacy roundtrip lowering on mean sync latency (averaged over
+thousands of calls, so scheduler noise integrates out).
+
+    PYTHONPATH=src python benchmarks/bench_comms.py \
+        [--smoke] [--full] [--wall-clock] [--out PATH]
 """
 from __future__ import annotations
 
@@ -48,6 +62,93 @@ CODECS = {
     "topk": Comms("topk"),
 }
 
+# the pre-compressed-collective lowering of the same codecs: encode, reduce
+# the DECODED f32 payload, decode — what the wire path has to beat
+LEGACY = {
+    "int8-legacy": Comms("int8", wire_reduce=False),
+    "sign-legacy": Comms("sign", wire_reduce=False),
+}
+
+# wall-clock repeats: this box's slow phases last seconds and swing
+# throughput by ~20%, so every repeat times ALL variants back-to-back and
+# each variant keeps its best — the bests sample the same fast machine
+# state, which is what makes ratios between them comparable
+WALL_REPEATS = 3
+
+
+def wall_clock_leg(ds, model, spec: HierarchySpec, T: int,
+                   backends) -> dict:
+    """Interleaved best-of-``WALL_REPEATS`` steps/sec per codec (plus the
+    legacy roundtrip variants) for each backend."""
+    variants = dict(CODECS)
+    variants.update(LEGACY)
+    out = {}
+    for backend in backends:
+        runs = {name: [] for name in variants}
+        for rep in range(WALL_REPEATS):
+            for name, comms in variants.items():
+                topo = make_topology("uniform", spec=spec)
+                runs[name].append(steps_per_sec(
+                    ds, model, topo, T=T, backend=backend, comms=comms))
+            print(f"... wall-clock {backend} rep {rep}: " + " ".join(
+                f"{n}={runs[n][-1]:.0f}" for n in runs))
+        out[backend] = {name: {"steps_per_sec_best": round(max(v), 2),
+                               "steps_per_sec_all": [round(x, 2) for x in v]}
+                        for name, v in runs.items()}
+    return out
+
+
+def sync_latency_leg(model, spec: HierarchySpec, iters: int = 1500) -> dict:
+    """Wall-clock of each codec's jitted L1 sync (sim arithmetic, the same
+    graph both executors' wire path lowers from), in microseconds: the min
+    over ``WALL_REPEATS`` interleaved passes of an ``iters``-call mean.
+    The long mean integrates out scheduler noise and the min discards
+    whole passes that landed in a slow machine phase, so ~10-20%
+    wire-vs-legacy margins are resolvable even on a box whose end-to-end
+    steps/sec jitters more than that."""
+    import time
+
+    from repro.comms.reduce import SimWireOps
+    from repro.core.topology import SyncEvent
+
+    topo = make_topology("uniform", spec=spec)
+    params = model.init(jax.random.PRNGKey(0))
+    n = spec.n_workers
+    tree = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(1),
+                                    (n,) + x.shape), params)
+    ev = SyncEvent(level=1)
+    ops = SimWireOps(spec.group_sizes, 1)
+
+    def reduce_fn(t):
+        return topo.aggregate(t, ev)
+
+    variants = dict(CODECS)
+    variants.update(LEGACY)
+    fns = {}
+    for name, comms in variants.items():
+        if comms is None:
+            fns[name] = jax.jit(reduce_fn)
+        elif comms.wire_reduce and comms.codec.wire_reduce:
+            fns[name] = jax.jit(
+                lambda t, c=comms: c.sync(t, reduce_fn, reduce_mode=ops)[0])
+        else:
+            fns[name] = jax.jit(lambda t, c=comms: c.sync(t, reduce_fn)[0])
+    out = {name: float("inf") for name in fns}
+    for _ in range(WALL_REPEATS):
+        for name, fn in fns.items():
+            r = fn(tree)
+            jax.block_until_ready(r)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                r = fn(tree)
+            jax.block_until_ready(r)
+            us = (time.perf_counter() - t0) / iters * 1e6
+            out[name] = round(min(out[name], us), 1)
+    print("... sync latency (us, min of interleaved means): " + " ".join(
+        f"{n}={v}" for n, v in out.items()))
+    return out
+
 
 def bench_one(ds, model, spec: HierarchySpec, comms, T: int,
               measure: bool) -> dict:
@@ -75,7 +176,7 @@ def bench_one(ds, model, spec: HierarchySpec, comms, T: int,
 
 
 def main(quick: bool = True, out: str = "BENCH_comms.json",
-         measure: bool = True) -> dict:
+         measure: bool = True, wall_clock: bool = False) -> dict:
     ds, model = make_world(n_workers=8)
     T = 64 if quick else 512
     report = {"steps": T, "topologies": {}}
@@ -92,6 +193,31 @@ def main(quick: bool = True, out: str = "BENCH_comms.json",
         assert row["identity"]["compression_ratio"] == 1.0
         assert row["int8"]["payload_bytes_per_worker"] < ident
         report["topologies"][tname] = row
+    if wall_clock:
+        spec = TOPOLOGIES["two_level"]
+        backends = ["sim"] + (["mesh"] if len(jax.devices()) >= spec.G
+                              else [])
+        wc = wall_clock_leg(ds, model, spec, 256 if quick else 1024,
+                            backends)
+        lat = sync_latency_leg(model, spec)
+        report["wall_clock"] = {"repeats": WALL_REPEATS,
+                                "steps": 256 if quick else 1024,
+                                "two_level": wc,
+                                "sync_latency_us": lat}
+        sim = wc["sim"]
+
+        # the wall-clock contract of the compressed-collective lowering.
+        # (1) identity pays nothing over comms-off: bucket elision makes
+        # its sync graph the off path's per-leaf mean, so the best
+        # SAME-REP pairing (adjacent runs share machine state) must sit
+        # within 5%
+        pairs = [i / o for i, o in zip(sim["identity"]["steps_per_sec_all"],
+                                       sim["off"]["steps_per_sec_all"])]
+        assert max(pairs) >= 0.95, (pairs, sim)
+        # (2) the wire paths beat their own legacy
+        # encode->reduce(f32)->decode form on mean sync latency
+        assert lat["int8"] < lat["int8-legacy"], lat
+        assert lat["sign"] < lat["sign-legacy"], lat
     with open(out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {out}")
@@ -107,6 +233,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: short run, skip throughput timing")
     ap.add_argument("--full", action="store_true", help="longer runs")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="timed leg: steps/sec per codec x backend, with "
+                         "the identity-overhead and legacy-beating bounds "
+                         "asserted")
     ap.add_argument("--out", default="BENCH_comms.json")
     args = ap.parse_args()
-    main(quick=not args.full, out=args.out, measure=not args.smoke)
+    main(quick=not args.full, out=args.out, measure=not args.smoke,
+         wall_clock=args.wall_clock)

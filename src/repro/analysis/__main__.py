@@ -43,12 +43,14 @@ CONFIGS = {
     "sim/two_level/off": ("two_level", "sim", None, "sgd"),
     "sim/two_level/identity": ("two_level", "sim", "identity", "sgd"),
     "sim/two_level/int8": ("two_level", "sim", "int8", "sgd"),
+    "sim/two_level/sign": ("two_level", "sim", "sign", "sgd"),
     "sim/two_level/momentum-int8": ("two_level", "sim", "int8", "momentum"),
     "sim/three_level/off": ("three_level", "sim", None, "sgd"),
     "sim/three_level/int8": ("three_level", "sim", "int8", "sgd"),
     "mesh/two_level/off": ("two_level", "mesh", None, "sgd"),
     "mesh/two_level/identity": ("two_level", "mesh", "identity", "sgd"),
     "mesh/two_level/int8": ("two_level", "mesh", "int8", "sgd"),
+    "mesh/two_level/sign": ("two_level", "mesh", "sign", "sgd"),
     "mesh/two_level/exact-off": ("two_level", "mesh-exact", None, "sgd"),
 }
 

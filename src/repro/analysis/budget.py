@@ -21,8 +21,11 @@ re-audited on this device count (the 8-dev mesh legs on a 1-dev machine)
 are preserved verbatim.
 
 Waiver format: ``budget["waivers"]`` maps an ``fnmatch`` config pattern to
-``{rule_id: reason}`` — e.g. ``"*int8*": {"R2": "..."}`` waives the known
-encode→reduce(f32)→decode finding on every compressing config at once.
+``{rule_id: reason}`` — e.g. ``"*grouped*": {"R1": "..."}``.  The
+compressed-collective configs (int8, sign) are deliberately un-waivable:
+their R2 burn-down is done, and :func:`check_reports` treats any waiver
+pattern that would re-cover them as a regression so the debt cannot quietly
+return.
 """
 from __future__ import annotations
 
@@ -34,6 +37,15 @@ from typing import Any, Dict, Iterable, List, Tuple
 from repro.analysis.report import SyncPlanReport
 
 BUDGET_FILE = "ANALYSIS_budget.json"
+
+# Configs whose R2 burn-down is complete: the compressed-collective lowering
+# keeps the wire dtype on the collective, so re-waiving them (on any
+# backend) would hide a real regression.  Probed with fnmatch against every
+# waiver pattern in check_reports.
+_UNWAIVABLE_PROBES = (
+    "sim/two_level/int8", "mesh/two_level/int8",
+    "sim/two_level/sign", "mesh/two_level/sign",
+)
 
 
 def load_budget(path) -> Dict[str, Any]:
@@ -150,6 +162,13 @@ def check_reports(reports: Iterable[SyncPlanReport],
     regs: List[str] = []
     imps: List[str] = []
     configs = budget.get("configs", {})
+    for pattern, rules in (budget.get("waivers") or {}).items():
+        hit = sorted(p for p in _UNWAIVABLE_PROBES if fnmatch(p, pattern))
+        if hit:
+            regs.append(
+                f"waiver pattern '{pattern}' ({'/'.join(sorted(rules))}) "
+                f"covers compressed-collective config(s) {hit} — their R2 "
+                f"burn-down is complete and may not be re-waived")
     for report in reports:
         for f in report.unwaived:
             regs.append(f"{report.config}: unwaived finding {f.rule} "

@@ -54,14 +54,18 @@ def _sync_parts(eng, state):
     return parts
 
 
-def _expected_sync_ops(eng, state) -> Optional[int]:
-    """``n_arrays × encode-keys``, or None when no exact prediction exists.
+def _expected_sync_ops(eng, state, backend: str = "sim") -> Optional[int]:
+    """Per-sync aggregation-op prediction, or None when no exact one exists.
 
-    n_arrays is what one sync reduces: dtype buckets per part with fused
-    comms on, leaves per part without.  Weighted aggregators add a
-    denominator reduction per array and ``exact=True`` replays the whole
-    sim reduce under one gather — neither has a clean closed form, so both
-    defer to the budget."""
+    Legacy roundtrip lowering: ``n_arrays × encode-keys`` — dtype buckets
+    per part with fused comms on, leaves per part without.  When the sync
+    lowers as a compressed collective (:func:`~repro.core.executors.
+    _wire_eligible`), the codec owns the count instead:
+    ``n_arrays × codec.lowered_sync_ops(backend)`` (int8 = quantized psum
+    [+ scale pmax under mesh], sign = vote + scale, ...).  Weighted
+    aggregators add a denominator reduction per array and ``exact=True``
+    replays the whole sim reduce under one gather — neither has a clean
+    closed form, so both defer to the budget."""
     topo = eng.topology
     if getattr(topo, "spec", None) is None:
         return None  # grouped topologies: membership-matrix path
@@ -74,6 +78,19 @@ def _expected_sync_ops(eng, state) -> Optional[int]:
         from repro.comms import FlatBucket
         n_arrays = sum(len(FlatBucket.plan(p).lengths)
                        for p in _sync_parts(eng, state))
+        from repro.core.executors import _wire_eligible
+        from repro.core.topology import SyncEvent
+        if _wire_eligible(eng, SyncEvent(level=1)):
+            codec = eng.comms.codec
+            per_array = codec.lowered_sync_ops(backend)
+            if per_array is not None:
+                if (codec.layout_free and not codec.stateful
+                        and backend == "sim"):
+                    # in-array backends elide the bucket for layout-free
+                    # codecs (see Comms.sync): one reduce per LEAF
+                    n_arrays = sum(len(jax.tree.leaves(p))
+                                   for p in _sync_parts(eng, state))
+                return n_arrays * per_array
     else:
         n_arrays = sum(len(jax.tree.leaves(p))
                        for p in _sync_parts(eng, state))
@@ -98,7 +115,8 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
     horizon = int(T) if T else topo.periods[0]
     schedule = topo.schedule(horizon)
 
-    expected_ops = _expected_sync_ops(eng, state)
+    expected_ops = _expected_sync_ops(eng, state,
+                                      "mesh" if is_mesh else "sim")
     ws = eng.wire_stats(state)
     wire = None
     if ws is not None:
@@ -107,10 +125,13 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
                 "f32_bytes": ws.f32_bytes,
                 "wire_dtypes": list(ws.wire_dtypes)}
     # R5 only has an exact per-worker element prediction when each array is
-    # reduced once as-is (single-key encode; no weight denominators)
+    # reduced once as-is: single-key encode, no weight denominators, and the
+    # identity codec (a compressed collective's counted totals include scale
+    # statistics / widened payloads, not the WireStats element count)
     expected_elems = None
     if ws is not None and expected_ops is not None and \
-            _encode_keys(topo.aggregator) == 1:
+            _encode_keys(topo.aggregator) == 1 and \
+            eng.comms is not None and eng.comms.codec.name == "identity":
         expected_elems = ws.n_elements
 
     events: Dict[str, EventAudit] = {}
@@ -128,9 +149,12 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
             o for o in summary.reduces if "pallas_call" not in o.path)
         elements = sum(o.elements for o in ops)
         nbytes = sum(o.nbytes for o in ops)
+        f32_elements = sum(o.elements for o in ops
+                           if "float32" in o.dtypes)
         if not is_mesh:  # sim reduces carry the full (n, ...) worker axis
             elements //= n
             nbytes //= n
+            f32_elements //= n
         events[key] = EventAudit(
             key=key, level=ev.level, groups=ev.groups,
             sync_ops=len(ops), expected_sync_ops=expected_ops,
@@ -138,7 +162,8 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
             axes=tuple(sorted({a for o in ops for a in o.axes})),
             wire_dtypes=tuple(sorted({d for o in ops for d in o.dtypes})),
             payload_elements=elements, payload_bytes=nbytes,
-            expected_payload_elements=expected_elems)
+            expected_payload_elements=expected_elems,
+            f32_elements=f32_elements)
 
     rounds: Dict[str, RoundAudit] = {}
     if batch_fn is not None:

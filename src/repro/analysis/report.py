@@ -37,6 +37,9 @@ class EventAudit:
     payload_elements: int
     payload_bytes: int
     expected_payload_elements: Optional[int]  # from WireStats (R5), if exact
+    f32_elements: Optional[int] = None    # elements of float32 sync operands
+    #   (R2: a compressing codec must keep f32 a strict minority of the
+    #   payload; None on reports predating the field -> R2 dtype fallback)
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -58,7 +61,9 @@ class EventAudit:
             payload_bytes=int(d.get("payload_bytes", 0)),
             expected_payload_elements=(
                 None if d.get("expected_payload_elements") is None
-                else int(d["expected_payload_elements"])))
+                else int(d["expected_payload_elements"])),
+            f32_elements=(None if d.get("f32_elements") is None
+                          else int(d["f32_elements"])))
 
 
 @dataclasses.dataclass(frozen=True)

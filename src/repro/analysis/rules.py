@@ -9,13 +9,17 @@ a hand-built report fixture.  The catalog (mirrored in DESIGN.md):
   (O(dtypes)), ``leaves × encode-keys`` without (O(leaves)).  Skipped when
   no exact prediction exists (grouped topology, weighted aggregator,
   ``exact=True``) — those configs are pinned by the budget diff instead.
-* **R2 no-f32-on-the-wire** — with a *compressing* codec active, the
-  lowered sync ops must not reduce float32.  Today the
-  encode→reduce(f32)→decode path FIRES this on every compressing config:
-  the payload is decoded BEFORE the reduction, so the declared compression
-  never reaches the wire.  Recorded as a baseline-waived known finding that
-  the compressed-allreduce ROADMAP item burns down — the waiver, not the
-  rule, is what that PR deletes.
+* **R2 no-f32-on-the-wire** — with a *compressing* codec active, float32
+  must be a strict minority of what the lowered sync ops move:
+  ``f32_elements > payload_elements // 2`` fires.  The compressed-
+  allreduce lowering keeps the encoded payload on the collective (int8
+  psums as a widened int32, sign votes as unpacked bits, top-k all-gathers
+  its sparse (values, indices) payload), so only small scale statistics —
+  and the f32 half of a top-k payload — may ride in f32.  The legacy
+  encode→reduce(f32)→decode roundtrip (``Comms(wire_reduce=False)``)
+  decodes BEFORE the reduction and still fires on every compressing
+  config.  Reports predating the ``f32_elements`` field fall back to the
+  original any-f32-dtype check.
 * **R3 host-free round body** — no host callbacks (``debug_callback``,
   ``pure_callback``, ``io_callback``) or device transfers inside a traced
   round program: one round must stay one device program.
@@ -52,13 +56,23 @@ def rule_r2_wire_dtypes(report: SyncPlanReport) -> List[Finding]:
         return []
     out = []
     for key, ev in sorted(report.events.items()):
-        if "float32" in ev.wire_dtypes:
+        if ev.f32_elements is None:
+            # report predates the element accounting: dtype-presence check
+            if "float32" in ev.wire_dtypes:
+                out.append(Finding(
+                    "R2", key,
+                    f"compressing codec '{report.codec}' is active but the "
+                    f"lowered sync reduces float32 — the "
+                    f"encode→reduce→decode path decodes BEFORE the "
+                    f"reduction, so compression never reaches the wire"))
+        elif ev.f32_elements > ev.payload_elements // 2:
             out.append(Finding(
                 "R2", key,
-                f"compressing codec '{report.codec}' is active but the "
-                f"lowered sync reduces float32 — the encode→reduce→decode "
-                f"path decodes BEFORE the reduction, so compression never "
-                f"reaches the wire"))
+                f"compressing codec '{report.codec}' is active but "
+                f"{ev.f32_elements} of the {ev.payload_elements} "
+                f"elements/worker the lowered sync moves are float32 — "
+                f"the payload is decoded before it reaches the collective, "
+                f"so the declared compression never reaches the wire"))
     return out
 
 

@@ -44,6 +44,16 @@ class Compressor(abc.ABC):
 
     name = "compressor"
     stateful = False
+    # True when :meth:`reduce` implements the compressed-collective form —
+    # the executor then hands the codec its WireOps instead of running the
+    # legacy encode -> reduce_fn(decoded f32) -> decode roundtrip
+    wire_reduce = False
+    # True when :meth:`reduce` is elementwise-independent of payload layout
+    # (no cross-element block statistics), so bucketizing the tree changes
+    # nothing but memory movement.  In-array backends then elide the
+    # FlatBucket pack/unpack pair from the round body entirely — this is
+    # what makes the identity codec wall-clock-free under sim.
+    layout_free = False
 
     @abc.abstractmethod
     def encode(self, x: jax.Array) -> Dict[str, jax.Array]:
@@ -72,6 +82,25 @@ class Compressor(abc.ABC):
             return sent.astype(x.dtype), None
         return sent.astype(x.dtype), (u - sent.astype(u.dtype))
 
+    def reduce(self, x: jax.Array, ops,
+               residual: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """The compressed collective: aggregate ``x`` THROUGH the encoded
+        wire form using ``ops`` (a :mod:`repro.comms.reduce` WireOps) so the
+        reduction operand carries the wire dtype, not decoded f32.  Returns
+        (aggregated payload, new error-feedback residual or None).  Only
+        meaningful when ``wire_reduce`` is True."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no compressed-collective form "
+            f"(wire_reduce={self.wire_reduce})")
+
+    def lowered_sync_ops(self, backend: str) -> Optional[int]:
+        """How many counted aggregation ops ONE :meth:`reduce` call lowers
+        to per payload buffer — in-array f32/i32 reduces under ``"sim"``,
+        named-axis collectives under ``"mesh"`` (the R1 prediction).  None
+        when no exact count exists."""
+        return None
+
     def __repr__(self):
         return f"{type(self).__name__}()"
 
@@ -86,12 +115,22 @@ class IdentityCompressor(Compressor):
     values) and as the accounting baseline."""
 
     name = "identity"
+    wire_reduce = True
+    layout_free = True  # plain mean: bucket layout cannot change a value
 
     def encode(self, x):
         return {"value": x}
 
     def decode(self, wire, like):
         return wire["value"]
+
+    def reduce(self, x, ops, residual=None):
+        # no wire format to exploit: one group mean per buffer, with no
+        # encode/decode bookkeeping around it (the identity-tax fix)
+        return ops.mean(x), None
+
+    def lowered_sync_ops(self, backend):
+        return 1
 
     def wire_spec(self, length, dtype):
         return (WireArray("value", (length,), jnp.dtype(dtype).name),)
@@ -102,6 +141,7 @@ class Int8Compressor(Compressor):
     (1 byte/element + one f32 scale per ``block``)."""
 
     name = "int8"
+    wire_reduce = True
 
     def __init__(self, block: int = 256):
         self.block = int(block)
@@ -116,6 +156,36 @@ class Int8Compressor(Compressor):
             wire["q"], wire["scale"], block=self.block,
             interpret=_interpret_default())
         return y.reshape(like.shape)
+
+    def reduce(self, x, ops, residual=None):
+        """The int8 compressed allreduce: share one group-max scale per
+        block (a max reduce of block stats), quantize against it, and SUM
+        THE INT8 PAYLOADS in an int32 accumulator — the only elementwise
+        reduction carries the widened wire dtype, exactly (|sum q| <=
+        127 * members < 2^31, and < 2^24 for any plausible group, so the
+        f32 decode is exact too).  One decode at the end: qsum * scale /
+        count."""
+        x2 = _rows(x).astype(jnp.float32)
+        r, c = x2.shape
+        nb = -(-c // self.block)
+        pad = nb * self.block - c
+        amax = jnp.pad(jnp.abs(x2), ((0, 0), (0, pad))) \
+            .reshape(r, nb, self.block).max(axis=-1)          # (r, nb)
+        scale = ops.max(amax) / 127.0                          # group scale
+        q = _kernels.int8_scale_quantize(
+            x2, scale, block=self.block, interpret=_interpret_default())
+        qsum = ops.sum(q.astype(jnp.int32))
+        y = (jnp.pad(qsum.astype(jnp.float32), ((0, 0), (0, pad)))
+             .reshape(r, nb, self.block) * scale[..., None]) \
+            .reshape(r, nb * self.block)[:, :c]
+        y = y / ops.count()
+        return y.reshape(x.shape).astype(x.dtype), None
+
+    def lowered_sync_ops(self, backend):
+        # mesh: pmax on the scales + psum on the int32 payload; sim: the
+        # reshape-max of block stats is not a counted aggregation reduce,
+        # leaving only the int32 worker-axis sum
+        return 2 if backend == "mesh" else 1
 
     def wire_spec(self, length, dtype):
         nb = -(-length // self.block)
@@ -133,6 +203,7 @@ class SignCompressor(Compressor):
     optimizer level or accept the trajectory change (tested finite)."""
 
     name = "sign"
+    wire_reduce = True
 
     def __init__(self, block: int = 1024):
         assert block % 8 == 0, block
@@ -149,6 +220,48 @@ class SignCompressor(Compressor):
             wire["bits"], wire["scale"], size=size, block=self.block,
             interpret=_interpret_default())
         return y.reshape(like.shape)
+
+    def reduce(self, x, ops, residual=None):
+        """The sign compressed reduce: the packed-uint8 payload crosses the
+        wire as-is (``ops.gathered``), the receive side unpacks bits, takes
+        the popcount/majority vote in int32, and scales by the group-mean
+        magnitude — the aggregate ``s_bar * (#pos - #neg) / count`` per
+        element.  No f32 dense payload ever hits the collective."""
+        x2 = _rows(x)
+        c = x2.shape[1]
+        block = self.block
+        bits, scale = _kernels.sign_pack(
+            x2, block=block, interpret=_interpret_default())
+
+        def fuse(bits_g, scale_g, wmask):
+            # member axis at -2 (WireOps.gathered contract)
+            from repro.core.aggregators import denominator_floor
+            b = bits_g.astype(jnp.int32)
+            shift = jnp.arange(8, dtype=jnp.int32)
+            unpacked = (b[..., None] >> shift) & 1
+            unpacked = unpacked.reshape(b.shape[:-1] + (-1,))[..., :c]
+            if wmask is None:
+                votes = unpacked.sum(axis=-2)                  # i32 reduce
+                count = float(b.shape[-2])                     # static
+                ssum = scale_g.sum(axis=-2)
+            else:
+                votes = (unpacked * wmask.astype(jnp.int32)[..., None]) \
+                    .sum(axis=-2)
+                count = jnp.maximum(wmask.sum(axis=-1, keepdims=True),
+                                    denominator_floor(jnp.float32))
+                ssum = (scale_g * wmask[..., None]).sum(axis=-2)
+            sgnsum = 2.0 * votes.astype(jnp.float32) - count   # #pos - #neg
+            sbar = ssum / count                                # mean scale
+            per = jnp.repeat(sbar, block, axis=-1)[..., :c]
+            return per * sgnsum / count
+
+        out = ops.gathered(fuse, bits, scale)
+        return out.reshape(x.shape).astype(x.dtype), None
+
+    def lowered_sync_ops(self, backend):
+        # mesh: all_gather of bits + all_gather of scales; sim: the i32
+        # vote sum + the f32 scale sum over the member axis
+        return 2
 
     def wire_spec(self, length, dtype):
         # the kernel pads bits to whole blocks for layout, but only
@@ -171,6 +284,7 @@ class TopKCompressor(Compressor):
 
     name = "topk"
     stateful = True
+    wire_reduce = True
 
     def __init__(self, rate: float = 1 / 16):
         assert 0 < rate <= 1, rate
@@ -193,6 +307,31 @@ class TopKCompressor(Compressor):
         r = jnp.arange(rows)[:, None]
         out = out.at[r, wire["indices"]].set(wire["values"])
         return out.reshape(like.shape)
+
+    def reduce(self, x, ops, residual=None):
+        """The top-k compressed collective: error feedback and the sparse
+        encode stay local and REPLICATE :meth:`roundtrip`'s casts exactly
+        (so residual trajectories match the legacy path bitwise); the
+        (values, indices) payload then rides ``ops.sparse_mean`` — a ragged
+        all-gather + fused Pallas decode-reduce on the mesh, the bitwise
+        dense group mean under sim."""
+        if residual is None:
+            u = x
+        else:
+            u = x.astype(residual.dtype) + residual
+        wire = self.encode(u)
+        sent = self.decode(wire, u)
+        new_res = None
+        if residual is not None:
+            new_res = u - sent.astype(u.dtype)
+        out = ops.sparse_mean(wire["values"], wire["indices"],
+                              sent.astype(x.dtype))
+        return out.astype(x.dtype).reshape(x.shape), new_res
+
+    def lowered_sync_ops(self, backend):
+        # mesh: all_gather of values + all_gather of indices (the fused
+        # decode-reduce is kernel-internal); sim: one dense f32 group mean
+        return 2 if backend == "mesh" else 1
 
     def wire_spec(self, length, dtype):
         k = self._k(length)

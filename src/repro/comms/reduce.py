@@ -1,0 +1,277 @@
+"""WireOps: the reduction surface a codec's compressed collective targets.
+
+The legacy sync path round-trips every worker's payload through
+encode→decode and hands the *decoded f32* tree to the executor's reduce —
+so the declared compression never reaches the collective.  A ``WireOps``
+instead exposes the executor's reduction vocabulary directly to the codec
+(:meth:`~repro.comms.codecs.Compressor.reduce`), so the operand on the wire
+is the ENCODED payload:
+
+* :meth:`mean` — the aggregator's f32 group mean (the identity codec's
+  whole lowering; bitwise-identical to ``UniformTopology.aggregate`` with
+  the default :class:`~repro.core.aggregators.MeanAggregator`);
+* :meth:`sum` — dtype-preserving group sum: an int8 payload widened to
+  int32 psums AS int32 (exact, order-independent — the int8 compressed
+  allreduce);
+* :meth:`max` — group max of non-negative block statistics (the shared
+  quantization scale);
+* :meth:`count` — participants per group (a static Python number when no
+  runtime mask is threaded, so unmasked syncs fold it at trace time);
+* :meth:`gathered` — ragged/packed forms that have no elementwise reduce
+  (sign majority vote): hand ``fn`` the group-stacked wire arrays with the
+  member axis at -2, plus the member participation mask (or None);
+* :meth:`sparse_mean` — top-k (values, indices) payloads: a fused
+  decode-reduce into the dense mean.
+
+Three implementations keep the exactness ladder intact: ``SimWireOps``
+(in-array reshape reduces over the worker axis — the reference arithmetic),
+``MeshWireOps`` (named-axis collectives inside ``shard_map`` — psum/pmax on
+the wire dtype, ``all_gather`` for ragged forms), and ``ExactWireOps``
+(gather the full worker block, replay ``SimWireOps``, select this shard's
+row — bitwise vs sim by construction).
+
+Masks are 0/1 participation weights; a masked-out worker contributes
+nothing to any reduction.  All group results come back broadcast over the
+worker rows of the input (every member row holds its group's value), which
+is the same contract ``Topology.aggregate`` keeps.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+class SimWireOps:
+    """In-array reductions over the leading worker axis (the sim executor's
+    form).  ``group_sizes`` + ``level`` define the member axis exactly as
+    ``UniformTopology.aggregate`` does: a level-ℓ sync reduces over the
+    trailing ``prod(group_sizes[ℓ-1:])`` workers of each outer group."""
+
+    backend = "sim"
+
+    def __init__(self, group_sizes: Sequence[int], level: int, mask=None):
+        self.gs = tuple(int(g) for g in group_sizes)
+        self.level = int(level)
+        self.mask = mask
+        self.members = _prod(self.gs[self.level - 1:])
+        self.outer = _prod(self.gs) // self.members
+
+    # -- shared shaping -----------------------------------------------------
+    def _axes(self) -> Tuple[int, ...]:
+        return tuple(range(self.level - 1, len(self.gs)))
+
+    def _shaped(self, x):
+        return x.reshape(self.gs + x.shape[1:])
+
+    def _wr(self, shaped, dtype):
+        if self.mask is None:
+            return None
+        w = jnp.asarray(self.mask).astype(dtype)
+        return w.reshape(self.gs + (1,) * (shaped.ndim - len(self.gs)))
+
+    def _restore(self, out, shaped_shape, flat_shape):
+        return jnp.broadcast_to(out, shaped_shape).reshape(flat_shape)
+
+    # -- the reduction vocabulary -------------------------------------------
+    def mean(self, x):
+        """Bitwise replica of ``UniformTopology.aggregate`` for the default
+        MeanAggregator(f32): encode=astype(f32), axis_weighted_mean,
+        decode=astype back, broadcast over the group rows."""
+        from repro.core.aggregators import axis_weighted_mean
+        shaped = self._shaped(x)
+        wr = self._wr(shaped, jnp.float32)
+        out = axis_weighted_mean(shaped.astype(jnp.float32), wr,
+                                 self._axes(), jnp.float32)
+        out = out.astype(x.dtype)
+        return self._restore(out, shaped.shape, x.shape)
+
+    def sum(self, x):
+        """Dtype-preserving masked group sum — int32 payloads accumulate in
+        int32 (exact, reassociation-free), which is the widened-accumulator
+        rule of the int8 compressed allreduce."""
+        shaped = self._shaped(x)
+        shape = shaped.shape
+        wr = self._wr(shaped, x.dtype)
+        if wr is not None:
+            shaped = shaped * wr
+        out = shaped.sum(axis=self._axes(), keepdims=True, dtype=x.dtype)
+        return self._restore(out, shape, x.shape)
+
+    def max(self, x):
+        """Masked group max of NON-NEGATIVE statistics (block amax); masked
+        rows are zeroed, never lowering a real max below 0."""
+        shaped = self._shaped(x)
+        shape = shaped.shape
+        wr = self._wr(shaped, x.dtype)
+        if wr is not None:
+            shaped = shaped * wr
+        out = shaped.max(axis=self._axes(), keepdims=True)
+        return self._restore(out, shape, x.shape)
+
+    def count(self):
+        """Participants per group: a static Python float when unmasked (no
+        device work), else a per-row (n, 1) f32 array floored away from 0."""
+        if self.mask is None:
+            return float(self.members)
+        from repro.core.aggregators import denominator_floor
+        m = jnp.asarray(self.mask).astype(jnp.float32).reshape(self.gs)
+        c = m.sum(axis=self._axes(), keepdims=True, dtype=jnp.float32)
+        c = jnp.broadcast_to(c, self.gs).reshape(-1, 1)
+        return jnp.maximum(c, denominator_floor(jnp.float32))
+
+    def gathered(self, fn: Callable, *arrays):
+        """Group-stack the (n, ...) wire arrays to (outer, members, ...),
+        call ``fn(*stacked, member_mask)`` (member axis at -2; mask is
+        (outer, members) or None), broadcast its (outer, ...) result back
+        over the member rows."""
+        g = [a.reshape((self.outer, self.members) + a.shape[1:])
+             for a in arrays]
+        wmask = None
+        if self.mask is not None:
+            wmask = jnp.asarray(self.mask).astype(jnp.float32).reshape(
+                self.outer, self.members)
+        out = fn(*g, wmask)
+        out = jnp.broadcast_to(out[:, None],
+                               (self.outer, self.members) + out.shape[1:])
+        return out.reshape((self.outer * self.members,) + out.shape[2:])
+
+    def sparse_mean(self, vals, idx, dense):
+        """Sim reference for top-k: the decoded dense payload already exists
+        locally, so the fused kernel is pointless — the group mean of the
+        dense form IS the legacy arithmetic, bitwise."""
+        del vals, idx
+        return self.mean(dense)
+
+
+class MeshWireOps:
+    """Named-axis collectives inside ``shard_map`` (the production mesh
+    lowering): psum/pmax carry the wire dtype, ragged forms all_gather the
+    encoded arrays.  ``axis_names`` are the event's syncing mesh axes
+    (``topology.level_axes``); ``members`` their static group size; ``mask``
+    the replicated (n,) participation mask and ``widx`` this shard's flat
+    worker index."""
+
+    backend = "mesh"
+
+    def __init__(self, axis_names: Sequence[str], members: int, mask=None,
+                 widx=None):
+        self.axes = tuple(axis_names)
+        self.members = int(members)
+        self.mask = mask
+        self.widx = widx
+
+    def _own_w(self, dtype):
+        if self.mask is None:
+            return None
+        return jnp.asarray(self.mask).astype(dtype)[self.widx]
+
+    def mean(self, x):
+        """The aggregator's axis-collective mean (same arithmetic the
+        legacy identity sync lowered to: one pmean per buffer)."""
+        from repro.core.aggregators import named_axis_weighted_mean
+        out = named_axis_weighted_mean(x.astype(jnp.float32),
+                                       self._own_w(jnp.float32),
+                                       self.axes, jnp.float32)
+        return out.astype(x.dtype)
+
+    def sum(self, x):
+        from repro.core.aggregators import named_axis_sum
+        return named_axis_sum(x, self.axes, self._own_w(x.dtype))
+
+    def max(self, x):
+        from repro.core.aggregators import named_axis_max
+        return named_axis_max(x, self.axes, self._own_w(x.dtype))
+
+    def count(self):
+        if self.mask is None:
+            return float(self.members)
+        from repro.core.aggregators import denominator_floor
+        c = jax.lax.psum(self._own_w(jnp.float32), self.axes)
+        return jnp.maximum(c, denominator_floor(jnp.float32))
+
+    def _member_mask(self):
+        if self.mask is None:
+            return None
+        return jax.lax.all_gather(self._own_w(jnp.float32), self.axes)
+
+    def gathered(self, fn: Callable, *arrays):
+        """all_gather each (1, ...) wire array over the syncing axes to
+        (members, ...) — the member axis lands at -2 because the per-shard
+        leading worker axis of size 1 is what gets tiled."""
+        g = [jax.lax.all_gather(a, self.axes, axis=0, tiled=True)
+             for a in arrays]
+        out = fn(*g, self._member_mask())
+        return out[None]
+
+    def sparse_mean(self, vals, idx, dense):
+        """The top-k compressed collective: ragged all-gather of the
+        (values, indices) payload + one Pallas fused decode-reduce into the
+        dense sum, then the participant mean."""
+        from repro.kernels import ops as _ops
+        vg = jax.lax.all_gather(vals, self.axes, axis=0, tiled=True)
+        ig = jax.lax.all_gather(idx, self.axes, axis=0, tiled=True)
+        wm = self._member_mask()
+        if wm is not None:
+            vg = vg * wm[:, None]
+        size = int(np.prod(dense.shape[1:], dtype=np.int64))
+        acc = _ops.topk_decode_reduce(vg.reshape(-1, vg.shape[-1]),
+                                      ig.reshape(-1, ig.shape[-1]),
+                                      size=size)
+        out = (acc / self.count()).reshape((1,) + dense.shape[1:])
+        return out.astype(dense.dtype)
+
+
+class ExactWireOps:
+    """The mesh executor's ``exact=True`` form: all_gather the FULL worker
+    block over every replica axis, replay :class:`SimWireOps` on it, and
+    select this shard's own row — bitwise-identical to the sim trajectory
+    for every codec, at n_workers x the sync bytes (verification mode)."""
+
+    backend = "sim"  # replays the sim arithmetic
+
+    def __init__(self, rep_axes: Sequence[str], widx,
+                 group_sizes: Sequence[int], level: int, mask=None):
+        self.rep = tuple(rep_axes)
+        self.widx = widx
+        self.sim = SimWireOps(group_sizes, level, mask)
+
+    def _gather(self, x):
+        return jax.lax.all_gather(x, self.rep, axis=0, tiled=True)
+
+    def _pick(self, out):
+        return jax.lax.dynamic_index_in_dim(out, self.widx, axis=0,
+                                            keepdims=True)
+
+    def mean(self, x):
+        return self._pick(self.sim.mean(self._gather(x)))
+
+    def sum(self, x):
+        return self._pick(self.sim.sum(self._gather(x)))
+
+    def max(self, x):
+        return self._pick(self.sim.max(self._gather(x)))
+
+    def count(self):
+        c = self.sim.count()
+        return c if isinstance(c, float) else self._pick(c)
+
+    def gathered(self, fn: Callable, *arrays):
+        g = [self._gather(a) for a in arrays]
+        return self._pick(self.sim.gathered(fn, *g))
+
+    def sparse_mean(self, vals, idx, dense):
+        return self._pick(self.sim.sparse_mean(
+            self._gather(vals), self._gather(idx), self._gather(dense)))
+
+
+WireOps = (SimWireOps, MeshWireOps, ExactWireOps)

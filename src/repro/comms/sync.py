@@ -26,23 +26,43 @@ class Comms:
     """compressor: a codec instance, registry name, or None (identity).
     bucket: fuse the tree into one buffer per dtype before encoding
     (O(dtypes) sync operands); False keeps leaf-wise payloads (O(leaves),
-    but still codec-compressed).  Extra kwargs construct the codec by name
-    (e.g. ``Comms("int8", block=128)``)."""
+    but still codec-compressed).  wire_reduce: let executors hand eligible
+    syncs to the codec's compressed-collective form
+    (:meth:`~repro.comms.codecs.Compressor.reduce`) instead of the legacy
+    per-worker encode/decode roundtrip; False forces the roundtrip path
+    everywhere.  Extra kwargs construct the codec by name (e.g.
+    ``Comms("int8", block=128)``)."""
 
     def __init__(self, compressor: CompressorLike = None, *,
-                 bucket: bool = True, **codec_kwargs):
+                 bucket: bool = True, wire_reduce: bool = True,
+                 **codec_kwargs):
         self.codec = make_compressor(compressor, **codec_kwargs)
         self.bucket = bool(bucket)
+        self.wire_reduce = bool(wire_reduce)
+        self._plans: Dict[Any, FlatBucket] = {}
 
     def __repr__(self):
         return f"Comms({self.codec!r}, bucket={self.bucket})"
 
     # -- payload layout -----------------------------------------------------
+    def _plan(self, tree) -> FlatBucket:
+        """Treedef-keyed bucket-plan cache: repeated traces of the same
+        tree signature (every round body re-traces the sync) hit the
+        instance cache instead of re-planning the layout.  The key carries
+        shapes/dtypes too — one Comms may serve several engines."""
+        leaves, treedef = jax.tree.flatten(tree)
+        key = (treedef, tuple((np.shape(l), jnp.dtype(l.dtype).name)
+                              for l in leaves))
+        fb = self._plans.get(key)
+        if fb is None:
+            fb = self._plans[key] = FlatBucket.plan(tree)
+        return fb
+
     def _payloads(self, tree):
         """tree -> (payload pytree the codec sees, FlatBucket | None)."""
         if not self.bucket:
             return tree, None
-        fb = FlatBucket.plan(tree)
+        fb = self._plan(tree)
         return fb.flatten(tree), fb
 
     # -- engine state -------------------------------------------------------
@@ -58,23 +78,47 @@ class Comms:
 
     # -- the sync ------------------------------------------------------------
     def sync(self, tree, reduce_fn: Callable[[Any], Any],
-             residual: Optional[Any] = None) -> Tuple[Any, Optional[Any]]:
-        """Aggregate ``tree`` through the wire: bucketize, codec-roundtrip
-        each worker's payload (+ error feedback when ``residual`` is
-        threaded), reduce the decoded payloads with ``reduce_fn``, restore
-        the tree.  Returns (aggregated tree, new residual)."""
-        payload, fb = self._payloads(tree)
+             residual: Optional[Any] = None,
+             reduce_mode: Optional[Any] = None) -> Tuple[Any, Optional[Any]]:
+        """Aggregate ``tree`` through the wire.  Returns
+        (aggregated tree, new residual).
+
+        ``reduce_mode=None`` (legacy): bucketize, codec-roundtrip each
+        worker's payload (+ error feedback when ``residual`` is threaded),
+        reduce the decoded payloads with ``reduce_fn``, restore the tree.
+
+        ``reduce_mode=<WireOps>``: the compressed-collective path — the
+        encoded payload itself is handed to the executor's collective via
+        :meth:`~repro.comms.codecs.Compressor.reduce`, so the wire carries
+        the codec's wire dtype instead of a decoded f32 round-trip.
+        ``reduce_fn`` is unused on this path.
+
+        Layout-free codecs (identity) under an in-array backend skip the
+        FlatBucket entirely: packing is pure data movement there — the
+        reduce is elementwise-identical either way — so the pack/unpack
+        pair would be the only thing the codec adds to the round body."""
+        if (reduce_mode is not None and self.codec.layout_free
+                and not self.codec.stateful
+                and getattr(reduce_mode, "backend", None) == "sim"):
+            payload, fb = tree, None
+        else:
+            payload, fb = self._payloads(tree)
         leaves, tdef = jax.tree.flatten(payload)
         if residual is None:
             rleaves = [None] * len(leaves)
         else:
             rleaves = tdef.flatten_up_to(residual)
-        pairs = [self.codec.roundtrip(x, r) for x, r in zip(leaves, rleaves)]
-        sent = tdef.unflatten([s for s, _ in pairs])
+        if reduce_mode is not None:
+            pairs = [self.codec.reduce(x, reduce_mode, r)
+                     for x, r in zip(leaves, rleaves)]
+            reduced = tdef.unflatten([s for s, _ in pairs])
+        else:
+            pairs = [self.codec.roundtrip(x, r)
+                     for x, r in zip(leaves, rleaves)]
+            reduced = reduce_fn(tdef.unflatten([s for s, _ in pairs]))
         new_res = None
         if self.codec.stateful and residual is not None:
             new_res = tdef.unflatten([r for _, r in pairs])
-        reduced = reduce_fn(sent)
         out = fb.unflatten(reduced) if fb is not None else reduced
         return out, new_res
 
@@ -82,10 +126,17 @@ class Comms:
     def payload_spec(self, params) -> Tuple[Tuple[WireArray, ...], int]:
         """Static (wire arrays, element count) for ONE worker's payload —
         the :class:`~repro.comms.wire.WireStats` input."""
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            if np.ndim(leaf) < 1:
+                raise ValueError(
+                    "payload_spec expects every leaf to carry a leading "
+                    f"worker axis; leaf {jax.tree_util.keystr(path)!r} is "
+                    "rank-0, so its per-worker element count would be "
+                    "miscounted.  Stack worker replicas on axis 0 first.")
         arrays = []
         total = 0
         if self.bucket:
-            fb = FlatBucket.plan(params)
+            fb = self._plan(params)
             for key in sorted(fb.lengths):
                 n = fb.lengths[key]
                 total += n

@@ -226,6 +226,33 @@ def named_axis_weighted_mean(v: jax.Array, w: Optional[jax.Array],
     return num / den
 
 
+def named_axis_sum(v: jax.Array, axis_names,
+                   w: Optional[jax.Array] = None) -> jax.Array:
+    """Wire-dtype-aware named-axis sum: the operand's OWN dtype rides the
+    collective (an int32 payload psums as int32 — the widened-accumulator
+    rule of the compressed allreduce; contrast the mean above, which always
+    promotes to the accumulation dtype).  ``w`` is the local shard's 0/1
+    participation weight, cast to the operand dtype so masked rows
+    contribute exact zeros."""
+    if not axis_names:
+        return v
+    if w is not None:
+        v = v * jnp.asarray(w).astype(v.dtype)
+    return jax.lax.psum(v, axis_names)
+
+
+def named_axis_max(v: jax.Array, axis_names,
+                   w: Optional[jax.Array] = None) -> jax.Array:
+    """Wire-dtype-aware named-axis max of NON-NEGATIVE statistics (block
+    amax scales): a masked-out shard's row is zeroed, never pulling a real
+    max below zero."""
+    if not axis_names:
+        return v
+    if w is not None:
+        v = v * jnp.asarray(w).astype(v.dtype)
+    return jax.lax.pmax(v, axis_names)
+
+
 def segment_weighted_mean(v: jax.Array, w: jax.Array,
                           membership: jax.Array, acc) -> jax.Array:
     """Per-group weighted mean of flat worker values.

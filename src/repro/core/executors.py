@@ -36,6 +36,7 @@ per (event, masked) / per Round exactly as before.
 from __future__ import annotations
 
 import abc
+import math
 from typing import Any, Dict, Optional, Union
 
 import jax
@@ -43,7 +44,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.aggregators import flat_worker_index
+from repro.comms.reduce import ExactWireOps, MeshWireOps, SimWireOps
+from repro.core.aggregators import Aggregator, flat_worker_index
 from repro.core.hsgd import (HSGDState, Round, _merge_moments, _moments_only)
 from repro.core.topology import SyncEvent
 
@@ -128,21 +130,51 @@ class Executor(abc.ABC):
             state, batches, jnp.asarray(mask))
 
 
-def _apply_sync(plan, reduce_fn, params, opt_state, cstate):
+def _wire_eligible(plan, event: SyncEvent) -> bool:
+    """Can this event's sync lower as a compressed collective
+    (:meth:`Comms.sync` with a ``reduce_mode``)?  The wire path reproduces
+    exactly the default lowering — bucketized payloads, uniform hierarchy,
+    the aggregator's stock f32 encode/mean/decode, no static per-worker or
+    per-event weights — so anything bespoke falls back to the legacy
+    encode→reduce→decode roundtrip unchanged.  Runtime masks ARE supported
+    (they thread into the WireOps)."""
+    comms = plan.comms
+    if comms is None or not (comms.wire_reduce and comms.codec.wire_reduce
+                             and comms.bucket):
+        return False
+    topo = plan.topology
+    if getattr(topo, "spec", None) is None:       # grouped: segment means
+        return False
+    if event.groups is not None or event.weights is not None:
+        return False
+    agg = topo.aggregator
+    if type(agg).encode is not Aggregator.encode or \
+            type(agg).decode is not Aggregator.decode:
+        return False                              # custom wire hooks
+    if agg.worker_weights(topo.n) is not None:
+        return False                              # weighted means
+    return jnp.dtype(agg.accum_dtype) == jnp.dtype(jnp.float32)
+
+
+def _apply_sync(plan, reduce_fn, params, opt_state, cstate, wire=None):
     """Shared sync dispatch for both executors: apply ``reduce_fn`` (the
     backend's aggregation — topology segment-means under sim, named-axis
     collectives under mesh) either directly or through the comms wire
     (bucketize + codec roundtrip + reduce), optimizer moments riding the
-    same path (stateless: no error feedback on moments)."""
+    same path (stateless: no error feedback on moments).  ``wire`` is the
+    backend's :class:`~repro.comms.reduce.WireOps` when the event lowers as
+    a compressed collective (see :func:`_wire_eligible`), else None."""
     if plan.comms is None:
         params = reduce_fn(params)
         if plan.aggregate_opt_state:
             opt_state = _merge_moments(
                 opt_state, reduce_fn(_moments_only(opt_state)))
         return params, opt_state, cstate
-    params, cstate = plan.comms.sync(params, reduce_fn, residual=cstate)
+    params, cstate = plan.comms.sync(params, reduce_fn, residual=cstate,
+                                     reduce_mode=wire)
     if plan.aggregate_opt_state:
-        agg, _ = plan.comms.sync(_moments_only(opt_state), reduce_fn)
+        agg, _ = plan.comms.sync(_moments_only(opt_state), reduce_fn,
+                                 reduce_mode=wire)
         opt_state = _merge_moments(opt_state, agg)
     return params, opt_state, cstate
 
@@ -209,8 +241,10 @@ class SimExecutor(Executor):
         plan = self.plan
         reduce_fn = lambda tree: plan.topology.aggregate(tree, event,
                                                          mask=mask)
+        wire = SimWireOps(plan.topology.spec.group_sizes, event.level,
+                          mask) if _wire_eligible(plan, event) else None
         new_p, new_o, new_c = _apply_sync(plan, reduce_fn, params, opt_state,
-                                          cstate)
+                                          cstate, wire=wire)
         if drop:
             keep = jnp.asarray(mask).astype(bool)
             new_p = _keep_rows(keep, new_p, params)
@@ -409,8 +443,20 @@ class MeshExecutor(Executor):
         acc = topo.aggregator.accum_dtype
         wvec = topo._event_weights(event, None)
         part = topo.participants(event)
+        wire_ok = _wire_eligible(plan, event)
+        if wire_ok:
+            ev_axes = tuple(topo.level_axes(event, rep))
+            members = math.prod(self.mesh.shape[a] for a in ev_axes)
 
         def apply_event(params, opt_state, cstate, mask, widx):
+            wire = None
+            if wire_ok:
+                # exact mode replays the SIM wire arithmetic on the gathered
+                # block (bitwise vs SimExecutor); production lowers the
+                # codec's collective over exactly the event's mesh axes
+                wire = ExactWireOps(rep, widx, topo.spec.group_sizes,
+                                    event.level, mask) if self.exact else \
+                    MeshWireOps(ev_axes, members, mask, widx)
             if self.exact:
                 # replay the ENTIRE sim reduce on the gathered worker block
                 # (same shapes, same weight combination -> bitwise), then
@@ -432,7 +478,7 @@ class MeshExecutor(Executor):
                     x, rep, event, worker_index=widx, weight=w)
                 reduce_fn = lambda tree: jax.tree.map(one, tree)
             new_p, new_o, new_c = _apply_sync(plan, reduce_fn, params,
-                                              opt_state, cstate)
+                                              opt_state, cstate, wire=wire)
             if plan.comms is not None:
                 # same restores as SimExecutor._apply_event, per shard: the
                 # comms path hands the reduce codec-roundtripped payloads,

@@ -10,6 +10,12 @@ codecs ship over the collective:
 * :func:`sign_pack` / :func:`sign_unpack` — 1-bit sign compression: 8 signs
   packed per uint8 plus a per-block magnitude ``mean|x_block|`` (the L2-optimal
   scale for a sign vector, as in 1-bit SGD / EF-signSGD).  ~32x fewer bytes.
+* :func:`int8_scale_quantize` — quantize against a caller-supplied (shared
+  group-max) scale, the encode side of the int8 compressed allreduce: every
+  group member's int8 payload is summable in an int32 accumulator.
+* :func:`topk_decode_reduce` — fused decode-reduce of a ragged-gathered
+  top-k (values, indices) payload into one dense sum, the receive side of
+  the top-k compressed collective.
 
 All kernels view a payload as rows of ``block`` contiguous elements (rows =
 workers or worker-shards, columns = the flat bucket).  The wrappers zero-pad
@@ -101,6 +107,75 @@ def int8_dequantize(q: jax.Array, scale: jax.Array, *, block: int = 256,
         interpret=interpret,
     )(qp, scale)
     return y[:, :c]
+
+
+def _int8_scale_quant_kernel(x_ref, s_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)                      # (1, B)
+    scale = s_ref[...]                                      # (1, 1)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q_ref[...] = jnp.clip(jnp.round(x * inv), -127.0, 127.0).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def int8_scale_quantize(x: jax.Array, scale: jax.Array, *, block: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """(x (R, C) float, scale f32 (R, ceil(C/block))) -> q int8 (R, C).
+
+    Quantize against a CALLER-supplied per-block scale instead of the local
+    block max — the compressed-allreduce form, where every group member
+    quantizes against the same group-max scale so the int8 payloads are
+    summable in an int32 accumulator (|sum q| <= 127 * members, exact)."""
+    r, c = x.shape
+    xp, nb = _pad_cols(x.astype(jnp.float32), block)
+    assert scale.shape == (r, nb), (scale.shape, (r, nb))
+    q = pl.pallas_call(
+        _int8_scale_quant_kernel,
+        grid=(r, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, nb * block), jnp.int8),
+        interpret=interpret,
+    )(xp, scale)
+    return q[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# top-k: fused decode-reduce of a ragged-gathered (values, indices) payload
+# ---------------------------------------------------------------------------
+def _topk_decode_reduce_kernel(v_ref, i_ref, o_ref, *, block: int):
+    j = pl.program_id(0)
+    v = v_ref[...].astype(jnp.float32).reshape(-1, 1)       # (m*k, 1)
+    idx = i_ref[...].reshape(-1, 1) - j * block             # (m*k, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    hit = (idx == cols).astype(jnp.float32)                 # (m*k, block)
+    o_ref[...] = jnp.sum(v * hit, axis=0, keepdims=True)    # (1, block)
+
+
+@functools.partial(jax.jit, static_argnames=("size", "block", "interpret"))
+def topk_decode_reduce(vals: jax.Array, idx: jax.Array, *, size: int,
+                       block: int = 256, interpret: bool = False) -> jax.Array:
+    """(vals f32 (M, K), idx int32 (M, K)) -> dense sum f32 (size,).
+
+    The top-k compressed collective's receive side: M gathered sparse
+    payloads (group members x k entries each) scatter-summed into one dense
+    buffer in a single fused kernel — decode and reduce never materialize M
+    dense payloads.  Each grid step owns one ``block``-wide output slice and
+    masks the (M*K) entries that land in it; per output element the sum
+    order over entries is fixed regardless of ``block``."""
+    m, k = vals.shape
+    assert idx.shape == (m, k), (idx.shape, (m, k))
+    nb = -(-size // block)
+    out = pl.pallas_call(
+        functools.partial(_topk_decode_reduce_kernel, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((m, k), lambda j: (0, 0)),
+                  pl.BlockSpec((m, k), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, nb * block), jnp.float32),
+        interpret=interpret,
+    )(vals, idx.astype(jnp.int32))
+    return out[0, :size]
 
 
 # ---------------------------------------------------------------------------

@@ -80,6 +80,29 @@ def int8_dequantize(q, scale, *, block: int = 256,
                                   interpret=interpret)
 
 
+def int8_scale_quantize(x, scale, *, block: int = 256,
+                        interpret: Optional[bool] = None):
+    """Quantize against a caller-supplied per-block scale.  The ``block``
+    here is pinned by the scale's shape (one scale per block), so unlike the
+    other comms entry points it is NOT shrunk in interpret mode — the caller
+    already committed to a blocking when it computed the scales."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _comms.int8_scale_quantize(x, scale, block=block,
+                                      interpret=interpret)
+
+
+def topk_decode_reduce(vals, idx, *, size: int, block: int = 256,
+                       interpret: Optional[bool] = None):
+    # per output element the sum order over sparse entries is independent of
+    # the block size, so the interpret-mode shrink never changes values
+    if interpret is None:
+        interpret = _interpret_default()
+    return _comms.topk_decode_reduce(vals, idx, size=size,
+                                     block=_comm_block(block, interpret),
+                                     interpret=interpret)
+
+
 def sign_pack(x, *, block: int = 1024, interpret: Optional[bool] = None):
     if interpret is None:
         interpret = _interpret_default()

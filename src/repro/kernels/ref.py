@@ -74,6 +74,24 @@ def int8_ref(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array, jax.Array]
     return q.astype(jnp.int8).reshape(r, nb * block)[:, :c], scale, rt
 
 
+def int8_scale_quant_ref(x: jax.Array, scale: jax.Array,
+                         block: int) -> jax.Array:
+    """Shared-scale int8 quantization oracle: q = clip(round(x / scale))
+    per block, with a zero scale mapping to q = 0."""
+    r, c = x.shape
+    xb, nb = _blocked(x, block)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(xb * inv[..., None]), -127, 127)
+    return q.astype(jnp.int8).reshape(r, nb * block)[:, :c]
+
+
+def topk_reduce_ref(vals: jax.Array, idx: jax.Array, size: int) -> jax.Array:
+    """Scatter-add oracle for the fused top-k decode-reduce: (M, K) sparse
+    payloads summed into one dense (size,) f32 buffer."""
+    return jnp.zeros((size,), jnp.float32).at[idx.ravel()].add(
+        vals.ravel().astype(jnp.float32))
+
+
 def sign_ref(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
     """1-bit sign oracle: (scale (R, nb) = mean|x| over real entries,
     roundtrip (R, C) = +-scale by sign(x), zeros counted as +)."""

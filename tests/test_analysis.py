@@ -3,8 +3,9 @@ report fixtures AND live engines, the budget diff, and the CLI gate.
 
 Every rule gets a good/bad fixture pair built from plain report data (no
 tracers), plus a live demonstration where one device suffices: an injected
-extra reduction is caught by R1, the int8 encode→reduce(f32)→decode
-baseline fires R2 (and the waiver mechanism suppresses it), a
+extra reduction is caught by R1, the legacy int8 encode→reduce(f32)→decode
+roundtrip (``wire_reduce=False``) fires R2 while the default compressed
+collective is clean, a
 ``jax.debug.print`` smuggled into the loss is caught by R3, and synthetic
 budget regressions (extra sync op, dtype upcast, byte growth) fail the
 check — the acceptance criteria of the analysis subsystem.
@@ -192,11 +193,28 @@ def test_live_audit_sim_off_matches_schedule():
     assert {r.cache_stable for r in rep.rounds.values()} == {True}
 
 
-def test_live_audit_int8_fires_r2_until_waived():
+def test_live_audit_int8_r2_burned_down_by_wire_reduce():
+    """The compressed-collective lowering keeps int8 on the wire (one int32
+    psum-in-wire-dtype per bucket), so R2 passes with NO waiver; forcing
+    the legacy roundtrip (``wire_reduce=False``) still fires it — the rule
+    watches the lowering, not the codec declaration."""
     eng, state, _ = build_engine("sim/two_level/int8")
     rep = eng.audit(state)  # sync-only audit: no batch_fn needed for R2
-    assert sorted({f.rule for f in rep.unwaived}) == ["R2"]
-    waived = eng.audit(state, waivers={"R2": "known baseline"})
+    assert rep.unwaived == ()
+    for ev in rep.events.values():
+        assert "float32" not in ev.wire_dtypes
+        assert ev.f32_elements == 0
+
+    from repro.comms import Comms
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=8,
+                                     num_classes=4))
+    topo = make_topology("uniform", spec=HierarchySpec((2, 4), (8, 4)))
+    legacy = HSGD(model.loss, sgd(0.1), topo,
+                  comms=Comms("int8", wire_reduce=False))
+    lstate = legacy.init(jax.random.PRNGKey(0), model.init)
+    lrep = legacy.audit(lstate)
+    assert sorted({f.rule for f in lrep.unwaived}) == ["R2"]
+    waived = legacy.audit(lstate, waivers={"R2": "known baseline"})
     assert waived.unwaived == ()
     assert any(f.rule == "R2" and f.waived for f in waived.findings)
 
@@ -342,8 +360,9 @@ def test_cli_check_passes_against_committed_budget(tmp_path):
     assert rc == 0
     payload = json.loads(out.read_text())
     assert "sim/two_level/off" in payload["configs"]
+    # the compressed-collective burn-down: int8 is clean, nothing waived
     int8 = payload["configs"]["sim/two_level/int8"]
-    assert any(f["rule"] == "R2" and f["waived"] for f in int8["findings"])
+    assert int8["findings"] == []
 
 
 def test_config_matrix_spans_the_lowering_paths():

@@ -17,9 +17,11 @@ from repro.comms.codecs import COMPRESSORS
 from repro.core import (HSGD, GroupedTopology, HierarchySpec, SyncEvent,
                         contiguous, make_aggregator, make_topology)
 from repro.data import FederatedDataset, label_shard_partition, make_classification
-from repro.kernels.comms import (int8_dequantize, int8_quantize, sign_pack,
-                                 sign_unpack)
-from repro.kernels.ref import int8_ref, sign_ref
+from repro.kernels.comms import (int8_dequantize, int8_quantize,
+                                 int8_scale_quantize, sign_pack, sign_unpack,
+                                 topk_decode_reduce)
+from repro.kernels.ref import (int8_ref, int8_scale_quant_ref, sign_ref,
+                               topk_reduce_ref)
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
 
@@ -121,6 +123,53 @@ def test_sign_kernels_match_ref(r, c, blk):
     np.testing.assert_allclose(np.asarray(y), np.asarray(rtr), rtol=1e-6)
     # decoded values are exactly +-(block mean |x|), sign-aligned with x
     assert (np.sign(np.asarray(y)) == np.where(np.asarray(x) >= 0, 1, -1)).all()
+
+
+@pytest.mark.parametrize("r,c,blk", [(3, 100, 32), (1, 64, 64), (4, 37, 16),
+                                     (2, 8, 8), (1, 7, 8)])
+def test_int8_scale_quantize_matches_ref(r, c, blk):
+    """The shared-scale quantizer of the compressed allreduce: the caller
+    supplies per-block scales (the group amax under the collective), the
+    kernel must reproduce the jnp oracle exactly — including a zero scale
+    mapping to q = 0."""
+    rng = np.random.default_rng(4)
+    nb = -(-c // blk)
+    x = jnp.asarray(rng.normal(size=(r, c)), jnp.float32)
+    scale = jnp.asarray(np.abs(rng.normal(size=(r, nb))), jnp.float32)
+    scale = scale.at[:, 0].set(0.0)  # exercise the zero-scale branch
+    q = int8_scale_quantize(x, scale, block=blk, interpret=True)
+    assert q.dtype == jnp.int8 and q.shape == (r, c)
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.asarray(int8_scale_quant_ref(x, scale,
+                                                                  blk)))
+    assert not np.asarray(q[:, :min(blk, c)]).any()  # zero scale -> q = 0
+
+
+@pytest.mark.parametrize("m,k,size,blk", [(8, 4, 100, 32), (1, 1, 7, 8),
+                                          (16, 15, 244, 64), (3, 10, 64, 64)])
+def test_topk_decode_reduce_matches_ref(m, k, size, blk):
+    """The fused Pallas decode-reduce behind the top-k ragged all-gather:
+    M sparse (values, indices) payloads scatter-added into one dense
+    (size,) f32 sum.  With unique indices the match against the jnp scatter
+    oracle is bitwise (each output element is a single payload value);
+    colliding indices accumulate, in a summation order that may differ from
+    the oracle's scatter order by f32 rounding (1 ulp)."""
+    rng = np.random.default_rng(5)
+    vals = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    uniq = jnp.asarray(rng.permutation(size)[:min(m * k, size)], jnp.int32)
+    if uniq.size == m * k:  # all indices distinct -> bitwise
+        out = topk_decode_reduce(vals, uniq.reshape(m, k), size=size,
+                                 block=blk, interpret=True)
+        assert out.shape == (size,) and out.dtype == jnp.float32
+        np.testing.assert_array_equal(
+            np.asarray(out),
+            np.asarray(topk_reduce_ref(vals, uniq.reshape(m, k), size)))
+    idx = jnp.asarray(rng.integers(0, size, size=(m, k)), jnp.int32)
+    out = topk_decode_reduce(vals, idx, size=size, block=blk, interpret=True)
+    assert out.shape == (size,) and out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(topk_reduce_ref(vals, idx, size)),
+        rtol=1e-6, atol=1e-6)
 
 
 def test_comm_kernels_public_entry_points():

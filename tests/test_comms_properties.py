@@ -89,6 +89,52 @@ def test_sign_preserves_signs_and_scale(rows, length, seed):
                                    np.abs(tail).mean(1), rtol=1e-5)
 
 
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([2, 8, 64, 256]), length=LENGTHS,
+       seed=st.integers(0, 10**6),
+       exps=st.lists(st.integers(-20, 20), min_size=1, max_size=8))
+def test_int8_wire_reduce_matches_f32_oracle(n, length, seed, exps):
+    """The compressed allreduce: int8 payloads psum in the wire dtype with
+    an int32-widened accumulator.  Because |Σ q| <= 127·n_workers < 2^24,
+    the widened integer sum is EXACTLY representable in f32, so the wire
+    path must match a pure-f32 oracle bitwise for any worker count up to
+    256 and any adversarial per-block magnitude (10^k, k in [-20, 20])."""
+    from repro.comms.reduce import SimWireOps
+    from repro.kernels.ref import int8_scale_quant_ref
+
+    blk = 32
+    nb = -(-length // blk)
+    rng = np.random.default_rng(seed)
+    mags = np.array([10.0 ** exps[j % len(exps)] for j in range(nb)],
+                    np.float32)
+    xn = rng.normal(size=(n, length)).astype(np.float32)
+    xn *= np.repeat(mags, blk)[:length]
+    x = jnp.asarray(xn)
+
+    out, res = Int8Compressor(block=blk).reduce(x, SimWireOps((n,), 1))
+    assert res is None and out.shape == x.shape
+
+    # f32 oracle: shared group-amax scale, jnp quantizer oracle, f32 sum of
+    # the small integers (exact), decode, participant mean
+    pad = np.zeros((n, nb * blk - length), np.float32)
+    xb = np.concatenate([xn, pad], 1).reshape(n, nb, blk)
+    scale = (np.abs(xb).max(-1).max(0) / 127.0).astype(np.float32)  # (nb,)
+    q = np.asarray(int8_scale_quant_ref(
+        x, jnp.asarray(np.broadcast_to(scale, (n, nb))), blk))
+    assert q.dtype == np.int8
+    qsum = q.astype(np.float32).sum(0)                  # exact integers
+    qpad = np.concatenate([qsum, np.zeros(nb * blk - length, np.float32)])
+    dense = (qpad.reshape(nb, blk) * scale[:, None]).reshape(-1)[:length]
+    dense = dense / np.float32(n)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.broadcast_to(dense, (n, length)))
+    # and the reduced mean is within half a quantization step of the true
+    # group mean (no clipping: the shared scale covers every worker)
+    bound = 0.5 * np.repeat(scale, blk)[:length] + 1e-30
+    assert (np.abs(np.asarray(out)[0] - xb.mean(0).reshape(-1)[:length])
+            <= bound).all()
+
+
 @given(rows=st.integers(1, 3),
        length=st.sampled_from([4, 32, 33, 100, 171, 256]),
        seed=st.integers(0, 10**6))

@@ -38,16 +38,17 @@ def make_world(n_workers: int = 8, num_classes: int = 8, dim: int = 24,
 def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
                bs: int = 10, eval_every: int = 8,
                use_rounds: bool = False, backend: str = "sim",
-               comms=None) -> List[Dict]:
+               comms=None, metrics=None) -> List[Dict]:
     """use_rounds=True runs the schedule-compiled ``run_rounds`` executor
     (same trajectory — tested — fewer dispatches); eval points then land on
     the round boundaries hit by ``eval_every``.  ``backend`` picks the
     executor ("sim" | "mesh"); mesh needs one device per worker.  ``comms``
-    selects a communication plan (codec name / repro.comms.Comms)."""
+    selects a communication plan (codec name / repro.comms.Comms);
+    ``metrics`` the in-graph probe plan ("on" / repro.obs.Metrics)."""
     if isinstance(topology, HierarchySpec):
         topology = make_topology(topology)
     eng = HSGD(model.loss, sgd(lr), topology, jit=True, executor=backend,
-               comms=comms)
+               comms=comms, metrics=metrics)
     st = eng.init(jax.random.PRNGKey(seed), model.init)
     gb = jax.tree.map(jnp.asarray, ds.global_batch(640))
 
@@ -74,14 +75,15 @@ def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
 def steps_per_sec(ds, model, topology, T: int = 256, lr: float = 0.08,
                   bs: int = 10, use_rounds: bool = False,
                   warmup: int = 32, backend: str = "sim",
-                  comms=None) -> float:
+                  comms=None, metrics=None) -> float:
     """Wall-clock throughput of the trajectory harness (no evals): the
     per-step dispatcher vs the schedule-compiled round executor, on either
-    execution backend ("sim" | "mesh"), with an optional comms plan."""
+    execution backend ("sim" | "mesh"), with an optional comms plan and
+    metrics probe plan (``metrics="on"`` for the R6 overhead contract)."""
     if isinstance(topology, HierarchySpec):
         topology = make_topology(topology)
     eng = HSGD(model.loss, sgd(lr), topology, jit=True, executor=backend,
-               comms=comms)
+               comms=comms, metrics=metrics)
     st = eng.init(jax.random.PRNGKey(0), model.init)
     # warmup must span >= one full global period so EVERY step/round
     # signature compiles before the timed region, and end on a period

@@ -4,7 +4,9 @@ the committed budget.
 The config matrix is small but deliberately spans every lowering path the
 rules distinguish: sim and mesh executors, two- and three-level schedules,
 comms off / identity / compressing (int8), a momentum run (optimizer
-moments on the wire) and the mesh ``exact=True`` replay.  Mesh configs need
+moments on the wire), the mesh ``exact=True`` replay, and metrics-on
+``probes`` configs (the R6 overhead contract of the in-graph divergence
+probe, on both backends).  Mesh configs need
 one device per worker (8); on fewer devices they are skipped — their budget
 entries survive ``--update`` untouched, which is how one budget file serves
 both CI legs.
@@ -38,20 +40,24 @@ _SPECS = {
     "three_level": ((2, 2, 2), (8, 4, 2)),
 }
 
-# name -> (spec, executor, comms, optimizer)
+# name -> (spec, executor, comms, optimizer, metrics)
 CONFIGS = {
-    "sim/two_level/off": ("two_level", "sim", None, "sgd"),
-    "sim/two_level/identity": ("two_level", "sim", "identity", "sgd"),
-    "sim/two_level/int8": ("two_level", "sim", "int8", "sgd"),
-    "sim/two_level/sign": ("two_level", "sim", "sign", "sgd"),
-    "sim/two_level/momentum-int8": ("two_level", "sim", "int8", "momentum"),
-    "sim/three_level/off": ("three_level", "sim", None, "sgd"),
-    "sim/three_level/int8": ("three_level", "sim", "int8", "sgd"),
-    "mesh/two_level/off": ("two_level", "mesh", None, "sgd"),
-    "mesh/two_level/identity": ("two_level", "mesh", "identity", "sgd"),
-    "mesh/two_level/int8": ("two_level", "mesh", "int8", "sgd"),
-    "mesh/two_level/sign": ("two_level", "mesh", "sign", "sgd"),
-    "mesh/two_level/exact-off": ("two_level", "mesh-exact", None, "sgd"),
+    "sim/two_level/off": ("two_level", "sim", None, "sgd", None),
+    "sim/two_level/identity": ("two_level", "sim", "identity", "sgd", None),
+    "sim/two_level/int8": ("two_level", "sim", "int8", "sgd", None),
+    "sim/two_level/sign": ("two_level", "sim", "sign", "sgd", None),
+    "sim/two_level/momentum-int8":
+        ("two_level", "sim", "int8", "momentum", None),
+    "sim/three_level/off": ("three_level", "sim", None, "sgd", None),
+    "sim/three_level/int8": ("three_level", "sim", "int8", "sgd", None),
+    "sim/two_level/probes": ("two_level", "sim", None, "sgd", "on"),
+    "sim/three_level/probes": ("three_level", "sim", None, "sgd", "on"),
+    "mesh/two_level/off": ("two_level", "mesh", None, "sgd", None),
+    "mesh/two_level/identity": ("two_level", "mesh", "identity", "sgd", None),
+    "mesh/two_level/int8": ("two_level", "mesh", "int8", "sgd", None),
+    "mesh/two_level/sign": ("two_level", "mesh", "sign", "sgd", None),
+    "mesh/two_level/exact-off": ("two_level", "mesh-exact", None, "sgd", None),
+    "mesh/two_level/probes": ("two_level", "mesh", None, "sgd", "on"),
 }
 
 
@@ -64,7 +70,7 @@ def build_engine(config: str):
     from repro.models.simple import SimpleConfig, SimpleModel
     from repro.optim.optimizers import momentum, sgd
 
-    spec_name, executor, comms, opt_name = CONFIGS[config]
+    spec_name, executor, comms, opt_name, metrics = CONFIGS[config]
     sizes, periods = _SPECS[spec_name]
     topo = make_topology("uniform", spec=HierarchySpec(sizes, periods))
     model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=8,
@@ -72,7 +78,8 @@ def build_engine(config: str):
     if executor == "mesh-exact":
         executor = MeshExecutor(exact=True)
     opt = momentum(0.1) if opt_name == "momentum" else sgd(0.1)
-    eng = HSGD(model.loss, opt, topo, executor=executor, comms=comms)
+    eng = HSGD(model.loss, opt, topo, executor=executor, comms=comms,
+               metrics=metrics)
     state = eng.init(jax.random.PRNGKey(0), model.init)
     n = topo.n
 

@@ -90,6 +90,11 @@ def entry_from_report(report: SyncPlanReport) -> Dict[str, Any]:
             "payload_bytes": report.wire["payload_bytes"],
             "wire_dtypes": sorted(report.wire["wire_dtypes"]),
         },
+        "probes": None if report.probes is None else {
+            "budget": report.probes.get("budget", 0),
+            "rounds": {k: dict(v) for k, v in
+                       sorted(report.probes.get("rounds", {}).items())},
+        },
         "findings": sorted(f"{f.rule}:{f.subject}" for f in report.findings),
     }
 
@@ -150,6 +155,19 @@ def diff_entry(config: str, entry: Dict[str, Any],
                   pinned["wire"]["payload_bytes"])
         _diff_set(regs, imps, where, "declared wire dtype(s)",
                   entry["wire"]["wire_dtypes"], pinned["wire"]["wire_dtypes"])
+    if entry.get("probes") and pinned.get("probes"):
+        # pinned probe-overhead floor: extra ops per round may only shrink;
+        # callbacks/transfers are additionally hard-zeroed by rule R6
+        now_r = entry["probes"].get("rounds", {})
+        old_r = pinned["probes"].get("rounds", {})
+        for key in sorted(set(now_r) & set(old_r)):
+            where = f"{config} probes {key}"
+            _diff_num(regs, imps, where, "extra probe ops",
+                      now_r[key].get("extra_ops", 0),
+                      old_r[key].get("extra_ops", 0))
+        _diff_num(regs, imps, f"{config} probes", "declared op budget",
+                  entry["probes"].get("budget", 0),
+                  pinned["probes"].get("budget", 0))
     _diff_set(regs, imps, config, "finding(s)", entry.get("findings", ()),
               pinned.get("findings", ()))
     return regs, imps

@@ -97,6 +97,22 @@ def _expected_sync_ops(eng, state, backend: str = "sim") -> Optional[int]:
     return n_arrays * _encode_keys(agg)
 
 
+def _metrics_off_twin(eng):
+    """A metrics-off clone of ``eng`` (same topology/comms/runtime/executor
+    settings) — the R6 baseline the metrics-on round bodies are diffed
+    against."""
+    from repro.core.hsgd import HSGD
+    ex = eng.executor
+    if getattr(ex, "mesh", None) is not None:
+        twin_ex = type(ex)(mesh=ex.mesh, exact=ex.exact)
+    else:
+        twin_ex = type(ex)()
+    return HSGD(eng.loss_fn, eng.optimizer, eng.topology,
+                aggregate_opt_state=eng.aggregate_opt_state, jit=eng._jit,
+                accum_steps=eng.accum_steps, executor=twin_ex,
+                comms=eng.comms, runtime=eng.runtime, metrics=None)
+
+
 def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
                  *, T: Optional[int] = None, config: str = "",
                  waivers: Mapping[str, str] = (),
@@ -166,8 +182,28 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
             f32_elements=f32_elements)
 
     rounds: Dict[str, RoundAudit] = {}
+    probes = None
     if batch_fn is not None:
         from repro.core.hsgd import Round, compile_schedule
+        twin = tstate = None
+        if eng.metrics is not None:
+            # R6: diff every round body against its metrics-off twin — the
+            # probe may add neither host callbacks/transfers nor more than
+            # the Metrics plan's declared op budget
+            twin = _metrics_off_twin(eng)
+            tstate = dataclasses.replace(state, metrics=None)
+            probes = {"budget": eng.metrics.op_budget(
+                "mesh" if is_mesh else "sim", topo,
+                len(jax.tree.leaves(state.params))), "rounds": {}}
+
+        def agg_ops(summary) -> int:
+            # same measure as the event audits: named-axis collectives under
+            # mesh, in-array reduces (minus codec-kernel internals) under sim
+            if is_mesh:
+                return summary.collective_count
+            return len([o for o in summary.reduces
+                        if "pallas_call" not in o.path])
+
         if run:
             eng.run_rounds(state, batch_fn, horizon)
         for rnd in dict.fromkeys(compile_schedule(schedule)):
@@ -186,6 +222,15 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
                 cache_stable=fn is ex.round_fn(Round(rnd.n_local, rnd.event)),
                 jit_cache_size=(cache_size() if callable(cache_size) and run
                                 else None))
+            if twin is not None:
+                tsum = walk(twin.executor.round_jaxpr(rnd, tstate, batches))
+                probes["rounds"][round_key(rnd)] = {
+                    "extra_ops": agg_ops(summary) - agg_ops(tsum),
+                    "extra_callbacks":
+                        len(summary.callbacks) - len(tsum.callbacks),
+                    "extra_transfers":
+                        len(summary.transfers) - len(tsum.transfers),
+                }
 
     report = SyncPlanReport(
         config=config,
@@ -193,6 +238,6 @@ def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,
         topology=type(topo).__name__,
         aggregator=type(topo.aggregator).__name__,
         codec=None if eng.comms is None else eng.comms.codec.name,
-        events=events, rounds=rounds, wire=wire)
+        events=events, rounds=rounds, wire=wire, probes=probes)
     return dataclasses.replace(
         report, findings=tuple(run_rules(report, waivers)))

@@ -133,6 +133,11 @@ class SyncPlanReport:
     rounds: Dict[str, RoundAudit]
     wire: Optional[Dict[str, Any]]         # WireStats-declared accounting
     findings: Tuple[Finding, ...] = ()
+    probes: Optional[Dict[str, Any]] = None
+    #   metrics-on overhead accounting (rule R6), None when the audited
+    #   engine has no observability plan: {"budget": max extra ops the
+    #   Metrics plan declares, "rounds": {round key: {"extra_ops",
+    #   "extra_callbacks", "extra_transfers"} vs the metrics-off twin}}
 
     @property
     def unwaived(self) -> Tuple[Finding, ...]:
@@ -147,6 +152,7 @@ class SyncPlanReport:
             "rounds": {k: v.to_dict() for k, v in sorted(self.rounds.items())},
             "wire": self.wire,
             "findings": [f.to_dict() for f in self.findings],
+            "probes": self.probes,
         }
 
     @classmethod
@@ -161,7 +167,8 @@ class SyncPlanReport:
                     for k, v in d.get("rounds", {}).items()},
             wire=d.get("wire"),
             findings=tuple(Finding.from_dict(f)
-                           for f in d.get("findings", ())))
+                           for f in d.get("findings", ())),
+            probes=d.get("probes"))
 
     # -- display -------------------------------------------------------------
     def summary(self) -> str:
@@ -191,6 +198,13 @@ class SyncPlanReport:
             lines.append(f"  wire: {self.wire['payload_bytes']}B/worker "
                          f"declared, dtypes="
                          f"{','.join(self.wire['wire_dtypes'])}")
+        if self.probes is not None:
+            for key, d in sorted(self.probes.get("rounds", {}).items()):
+                lines.append(
+                    f"  probes {key}: +{d.get('extra_ops', 0)} op(s) vs "
+                    f"metrics-off (budget {self.probes.get('budget', 0)}), "
+                    f"+{d.get('extra_callbacks', 0)} callback(s), "
+                    f"+{d.get('extra_transfers', 0)} transfer(s)")
         for f in self.findings:
             tag = "waived" if f.waived else "FINDING"
             why = f" [{f.waive_reason}]" if f.waived else ""

@@ -30,6 +30,12 @@ a hand-built report fixture.  The catalog (mirrored in DESIGN.md):
   sync ops consume must equal the static ``WireStats`` element count:
   accounting (what history's ``wire_bytes`` reports) may not drift from
   reality (what the program moves).
+* **R6 probe overhead** — a metrics-on round body must add ZERO host
+  callbacks and zero device transfers versus its metrics-off twin
+  (observability may never reintroduce the per-step host sync R3 banned),
+  and at most ``Metrics.op_budget`` extra aggregation ops (the declared
+  cost of the in-graph divergence probe + grad-norm channel).  Skipped on
+  reports without a ``probes`` block (engine audited with metrics off).
 """
 from __future__ import annotations
 
@@ -117,12 +123,38 @@ def rule_r5_wire_accounting(report: SyncPlanReport) -> List[Finding]:
     return out
 
 
+def rule_r6_probe_overhead(report: SyncPlanReport) -> List[Finding]:
+    if report.probes is None:
+        return []
+    out = []
+    budget = int(report.probes.get("budget", 0))
+    for key, d in sorted(report.probes.get("rounds", {}).items()):
+        cbs = int(d.get("extra_callbacks", 0))
+        xfs = int(d.get("extra_transfers", 0))
+        if cbs > 0 or xfs > 0:
+            out.append(Finding(
+                "R6", key,
+                f"metrics-on round body adds {cbs} host callback(s) and "
+                f"{xfs} device transfer(s) vs its metrics-off twin — the "
+                f"probe must stay in-graph (drained in bulk, never per "
+                f"round)"))
+        extra = int(d.get("extra_ops", 0))
+        if extra > budget:
+            out.append(Finding(
+                "R6", key,
+                f"metrics-on round body adds {extra} aggregation op(s) vs "
+                f"its metrics-off twin, over the declared probe budget of "
+                f"{budget}"))
+    return out
+
+
 RULES: Dict[str, Callable[[SyncPlanReport], List[Finding]]] = {
     "R1": rule_r1_sync_op_count,
     "R2": rule_r2_wire_dtypes,
     "R3": rule_r3_host_free,
     "R4": rule_r4_retrace,
     "R5": rule_r5_wire_accounting,
+    "R6": rule_r6_probe_overhead,
 }
 
 

@@ -5,10 +5,13 @@ from repro.core.aggregators import (Aggregator, CompressedAggregator,
                                     MeanAggregator, SignSGDAggregator,
                                     WeightedAggregator, make_aggregator,
                                     register_aggregator)
-from repro.core.divergence import (all_divergences, downward_divergence_avg,
+from repro.core.divergence import (all_divergences, divergence_stack,
+                                   downward_divergence_avg,
                                    downward_divergences, flatten_pytree_batch,
-                                   global_divergence, partition_residual,
-                                   per_worker_grads, upward_divergence)
+                                   global_divergence, partition_divergences,
+                                   partition_divergences_tree,
+                                   partition_residual, per_worker_grads,
+                                   upward_divergence)
 from repro.core.grouping import (Grouping, contiguous, diversity_grouping,
                                  group_iid, group_noniid, random_grouping,
                                  sample_participation)
@@ -37,7 +40,8 @@ __all__ = [
     "fastest_under_bound", "pareto_front",
     "Grouping", "contiguous", "group_iid", "group_noniid", "random_grouping",
     "sample_participation", "diversity_grouping",
-    "all_divergences", "downward_divergence_avg", "downward_divergences",
-    "flatten_pytree_batch", "global_divergence", "partition_residual",
-    "per_worker_grads", "upward_divergence",
+    "all_divergences", "divergence_stack", "downward_divergence_avg",
+    "downward_divergences", "flatten_pytree_batch", "global_divergence",
+    "partition_divergences", "partition_divergences_tree",
+    "partition_residual", "per_worker_grads", "upward_divergence",
 ]

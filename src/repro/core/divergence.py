@@ -44,11 +44,16 @@ def upward_divergence(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
 
 
 def downward_divergences(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
-    """per-group (1/n_i) sum_{j in V_i} ||g_j - grad f_i||^2 — Assumption 1d."""
+    """per-group (1/n_i) sum_{j in V_i} ||g_j - grad f_i||^2 — Assumption 1d.
+
+    The per-worker group mean is scattered back with the one-hot transpose
+    (``ohᵀ @ gm``) rather than a gather on the assignment vector: identical
+    values (one-hot rows select exactly one mean), but no integer-constant
+    ``device_put`` in the traced program — this function is also the
+    in-graph probe body, and rule R3/R6 hold round bodies transfer-free."""
     gm = group_means(g, grouping)                          # (N, dim)
-    a = np.asarray(grouping.assignment)
-    diffs = jnp.sum((g - gm[a]) ** 2, axis=1)              # (n,)
-    oh = jnp.asarray(grouping.onehot(), g.dtype)
+    oh = jnp.asarray(grouping.onehot(), g.dtype)           # (N, n)
+    diffs = jnp.sum((g - oh.T @ gm) ** 2, axis=1)          # (n,)
     return (oh @ diffs) / jnp.asarray(grouping.sizes, g.dtype)
 
 
@@ -66,12 +71,123 @@ def partition_residual(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
             - downward_divergence_avg(g, grouping))
 
 
+def partition_divergences(g: jnp.ndarray, groupings) -> jnp.ndarray:
+    """The eq. (10) partition row ``[global, up_1, down_1, up_2, ...]`` for
+    every grouping in ``groupings``, fused.
+
+    This is the in-graph probe's formula (:meth:`repro.obs.Metrics.
+    sim_row_fn`): center once (``y = g - mean``), then every term is a
+    sum-of-squares identity on y — ``global = E||y_j||^2``,
+    ``up = sum_i w_i ||gm_i(y)||^2`` and ``down = global - up`` (exact:
+    E||y - gm||^2 = E||y||^2 - ||gm||^2 per group, so the partition holds
+    by construction).  One pass over the (n, dim) block plus one group-mean
+    contraction per level — no full-size temporaries per term, which is
+    what keeps the probe inside the R6 overhead contract.  Centering first
+    keeps the decomposition cancellation-free: every squared norm is
+    already on the divergence scale.  The naive per-term formulas above are
+    the independent oracle the probe is tested against."""
+    y = g - g.mean(0)
+    total = jnp.mean(jnp.sum(y * y, axis=1))
+    out = [total]
+    for grouping in groupings:
+        gm = group_means(y, grouping)                      # (N, dim)
+        w = jnp.asarray(grouping.sizes, g.dtype) / grouping.n
+        up = jnp.sum(w * jnp.sum(gm * gm, axis=1))
+        out += [up, total - up]
+    return jnp.stack(out)
+
+
+def _lift_matrices(groupings):
+    """For NESTED groupings (outermost first — an H-SGD hierarchy's
+    ``level_groupings``), the (N_l, N_fin) maps taking finest-level group
+    means to each coarser level's group means.  None when the groupings
+    are not nested (independent partitions: no lift exists)."""
+    fin = groupings[-1]
+    ohf = np.asarray(fin.onehot(), np.float64)             # (Nf, n)
+    lifts = []
+    for g in groupings[:-1]:
+        counts = np.asarray(g.onehot(), np.float64) @ ohf.T  # workers in both
+        if (np.count_nonzero(counts, axis=0) != 1).any():
+            return None
+        # float64 on purpose: ``jnp.asarray(lift, jnp.float32)`` in the
+        # traced probe then lowers as a dtype-converted constant, not a
+        # ``device_put`` transfer (rule R3 keeps round bodies transfer-free)
+        lifts.append(counts / np.asarray(g.sizes, np.float64)[:, None])
+    return lifts
+
+
+def partition_divergences_tree(params, groupings) -> jnp.ndarray:
+    """:func:`partition_divergences` evaluated leaf-by-leaf on a pytree
+    with a leading worker dim — the sum-of-squares terms are additive over
+    leaves, so the (n, dim) flatten/concat (a full param-set copy per
+    probe) never materializes.  This is what the in-graph probe lowers.
+
+    For nested groupings only the FINEST level touches the (n, dim) block:
+    its group means come from one contraction, the global mean and every
+    coarser level's means are weighted combinations of those (tiny), and
+    the only other full-size pass is the fused centered-norm reduction for
+    the global term — two passes over the params per probe, independent of
+    the number of levels.  Non-nested groupings fall back to one
+    contraction per level."""
+    leaves = [jnp.reshape(l, (l.shape[0], -1)).astype(jnp.float32)
+              for l in jax.tree.leaves(params)]
+    total = jnp.zeros((), jnp.float32)
+    ups = [jnp.zeros((), jnp.float32) for _ in groupings]
+
+    def up_term(gm_centered, grouping):
+        w = jnp.asarray(grouping.sizes, jnp.float32) / grouping.n
+        return jnp.sum(w * jnp.sum(gm_centered * gm_centered, axis=1))
+
+    lifts = _lift_matrices(groupings) if groupings else None
+    if lifts is not None:
+        lifts = [jnp.asarray(l, jnp.float32) for l in lifts]
+    for x in leaves:
+        if lifts is None:
+            y = x - x.mean(0)
+            total = total + jnp.mean(jnp.sum(y * y, axis=1))
+            for i, grouping in enumerate(groupings):
+                ups[i] = ups[i] + up_term(group_means(y, grouping), grouping)
+            continue
+        fin = groupings[-1]
+        gmf = group_means(x, fin)                          # (Nf, dim)
+        wf = jnp.asarray(fin.sizes, jnp.float32) / fin.n
+        xbar = jnp.sum(wf[:, None] * gmf, axis=0)          # global mean
+        total = total + jnp.mean(jnp.sum((x - xbar) ** 2, axis=1))
+        gmfc = gmf - xbar
+        ups[-1] = ups[-1] + up_term(gmfc, fin)
+        for i, lift in enumerate(lifts):
+            ups[i] = ups[i] + up_term(lift @ gmfc, groupings[i])
+    out = [total]
+    for up in ups:
+        out += [up, total - up]
+    return jnp.stack(out)
+
+
+def divergence_stack(g: jnp.ndarray, grouping: Grouping) -> jnp.ndarray:
+    """All four divergence summaries as ONE stacked device array
+    ``[global, upward, downward_avg, downward_max]`` — a single fused
+    computation whose group means are shared across the four outputs,
+    so callers pay one device→host transfer instead of four."""
+    dd = downward_divergences(g, grouping)
+    w = jnp.asarray(grouping.sizes, g.dtype) / grouping.n
+    return jnp.stack([
+        global_divergence(g),
+        upward_divergence(g, grouping),
+        jnp.sum(w * dd),
+        dd.max(),
+    ])
+
+
 def all_divergences(g: jnp.ndarray, grouping: Grouping) -> Dict[str, float]:
+    """Host-side divergence summary.  One device→host transfer: the four
+    scalars come back as a single stacked array (``divergence_stack``), not
+    four separate ``float(...)`` syncs."""
+    vals = np.asarray(divergence_stack(g, grouping))
     return {
-        "global": float(global_divergence(g)),
-        "upward": float(upward_divergence(g, grouping)),
-        "downward_avg": float(downward_divergence_avg(g, grouping)),
-        "downward_max": float(downward_divergences(g, grouping).max()),
+        "global": float(vals[0]),
+        "upward": float(vals[1]),
+        "downward_avg": float(vals[2]),
+        "downward_max": float(vals[3]),
     }
 
 

@@ -277,25 +277,39 @@ class SimExecutor(Executor):
                                      mask=mask)
         return sync
 
+    def _probe_row_fn(self, event: Optional[SyncEvent]):
+        """The in-graph divergence probe for sync steps (None when metrics
+        are off, divergences disabled, or there is no event).  Pushed BEFORE
+        :meth:`_apply_event` so it measures the PRE-aggregation worker
+        params — the live eq. (10) partition."""
+        plan = self.plan
+        if event is None or plan.metrics is None \
+                or not plan.metrics.divergences:
+            return None
+        return plan.metrics.sim_row_fn(plan.topology)
+
     # -- one combined step per event ------------------------------------------
     def _build_step(self, event: Optional[SyncEvent], masked: bool = False):
         local_update = self.plan.local_update_fn()
+        row_fn = self._probe_row_fn(event)
 
         def step(state: HSGDState, batch, mask=None):
             params, opt_state, metrics = jax.vmap(local_update)(
                 state.params, state.opt_state, batch)
-            cstate = state.comms
+            cstate, mbuf = state.comms, state.metrics
             if masked:
                 # non-participating workers keep their previous state
                 params = _keep_rows(mask, params, state.params)
                 opt_state = _keep_rows(mask, opt_state, state.opt_state)
             if event is not None:
+                if row_fn is not None and mbuf is not None:
+                    mbuf = mbuf.push(row_fn(params))
                 amask = mask if masked else None
                 params, opt_state, cstate = self._apply_event(
                     params, opt_state, cstate, event, mask=amask)
             metrics = jax.tree.map(lambda m: m.mean(), metrics)
             return HSGDState(params, opt_state, state.step + 1,
-                             cstate), metrics
+                             cstate, mbuf), metrics
 
         if not self.plan._jit:
             return step
@@ -317,6 +331,7 @@ class SimExecutor(Executor):
         argument)."""
         local_update = self.plan.local_update_fn()
         vupdate = jax.vmap(local_update)
+        row_fn = self._probe_row_fn(rnd.event)
         if masked:
             assert rnd.event is not None, \
                 "a masked round needs a sync event to drop workers from"
@@ -333,13 +348,15 @@ class SimExecutor(Executor):
 
             (params, opt_state), metrics = jax.lax.scan(
                 body, (state.params, state.opt_state), stacked)
-            cstate = state.comms
+            cstate, mbuf = state.comms, state.metrics
             if rnd.event is not None:
+                if row_fn is not None and mbuf is not None:
+                    mbuf = mbuf.push(row_fn(params))
                 params, opt_state, cstate = self._apply_event(
                     params, opt_state, cstate, rnd.event,
                     mask=mask, drop=masked)
             state = HSGDState(params, opt_state, state.step + rnd.n_local,
-                              cstate)
+                              cstate, mbuf)
             return state, metrics  # metrics stacked (n_local,) per entry
 
         if not self.plan._jit:
@@ -419,6 +436,13 @@ class MeshExecutor(Executor):
                 f"need n_replicas(mesh) == {topo.n} workers, got "
                 f"{n_replicas(self.mesh)} "
                 f"({dict(zip(self.rep_axes, sizes))})")
+        if spec is None and self.plan.metrics is not None \
+                and self.plan.metrics.divergences:
+            raise NotImplementedError(
+                f"{type(topo).__name__} has no named-axis level structure "
+                "for the in-graph divergence probe; run it on the simulator "
+                "(HSGD(..., executor='sim')) or disable divergence probing "
+                "(metrics=Metrics(divergences=False))")
 
     def place(self, state: HSGDState) -> HSGDState:
         from repro.launch.partitioning import hsgd_state_shardings
@@ -551,14 +575,25 @@ class MeshExecutor(Executor):
         body; each shard folds its own mask entry into the collective's
         weight (mirroring ``Topology._event_weights``) and row-selects its
         state afterwards.  ``drop`` picks between the two mask semantics —
-        see the class docstring."""
+        see the class docstring.
+
+        With metrics on, the probe buffer rides through the shard_map
+        REPLICATED (``P()`` in and out): the divergence row is the
+        named-axis probe (:meth:`~repro.obs.Metrics.mesh_row_fn` — per-level
+        pmean group means, one final stacked pmean, so the pushed values are
+        identical on every shard), measured on the pre-aggregation shard
+        params right before the event collective."""
         plan, mesh, rep = self.plan, self.mesh, self.rep_axes
         vupdate = jax.vmap(plan.local_update_fn())
         sizes = tuple(mesh.shape[a] for a in rep)
         apply_event = self._event_applier(event, drop=drop) \
             if event is not None else None
+        row_fn = None
+        if event is not None and plan.metrics is not None \
+                and plan.metrics.divergences:
+            row_fn = plan.metrics.mesh_row_fn(plan.topology, rep)
 
-        def body(params, opt_state, cstate, stacked, mask):
+        def body(params, opt_state, cstate, mbuf, stacked, mask):
             # per-shard shapes: leading worker axis == 1
             def local_block(carry, batch):
                 p, o = carry
@@ -576,36 +611,43 @@ class MeshExecutor(Executor):
                 params = _keep_shard(keep, params, p0)
                 opt_state = _keep_shard(keep, opt_state, o0)
             if event is not None:
+                if row_fn is not None and mbuf is not None:
+                    mbuf = mbuf.push(row_fn(params))
                 params, opt_state, cstate = apply_event(
                     params, opt_state, cstate,
                     mask if masked else None, widx)
             # worker-mean of the per-step metrics, replicated everywhere
             metrics = jax.tree.map(lambda m: jax.lax.pmean(m, rep), metrics)
-            return params, opt_state, cstate, metrics
+            return params, opt_state, cstate, mbuf, metrics
 
-        def core(params, opt_state, cstate, stacked, mask=None):
+        def core(params, opt_state, cstate, mbuf, stacked, mask=None):
             pspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), params)
             ospec = jax.tree.map(lambda x: self._lead_spec(x.ndim), opt_state)
             cspec = jax.tree.map(lambda x: self._lead_spec(x.ndim), cstate)
+            mspec = jax.tree.map(lambda x: P(), mbuf)
             bspec = jax.tree.map(lambda x: self._lead_spec(x.ndim, 1), stacked)
             # pallas_call (the comms codec kernels) has no shard_map
-            # replication rule, and masked rounds mix per-shard row-selects
-            # into the collective outputs; the aggregates are replicated by
-            # construction (pmean/all_gather), so skipping the check is safe
+            # replication rule, masked rounds mix per-shard row-selects
+            # into the collective outputs, and the probe pushes partially-
+            # replicated pmeans into the replicated buffer; the aggregates
+            # (and the probe row — its last op is a pmean over ALL replica
+            # axes) are replicated by construction, so skipping the check
+            # is safe
             kw = dict(check_rep=False) \
-                if (plan.comms is not None or masked) else {}
+                if (plan.comms is not None or masked
+                    or row_fn is not None) else {}
             if not masked:
                 fn = shard_map(
-                    lambda p, o, c, b: body(p, o, c, b, None), mesh=mesh,
-                    in_specs=(pspec, ospec, cspec, bspec),
-                    out_specs=(pspec, ospec, cspec, P()), **kw)
-                return fn(params, opt_state, cstate, stacked)
+                    lambda p, o, c, mb, b: body(p, o, c, mb, b, None),
+                    mesh=mesh, in_specs=(pspec, ospec, cspec, mspec, bspec),
+                    out_specs=(pspec, ospec, cspec, mspec, P()), **kw)
+                return fn(params, opt_state, cstate, mbuf, stacked)
             # the mask rides in replicated: every shard reads its own entry
             fn = shard_map(
-                lambda p, o, c, b, m: body(p, o, c, b, m), mesh=mesh,
-                in_specs=(pspec, ospec, cspec, bspec, P()),
-                out_specs=(pspec, ospec, cspec, P()), **kw)
-            return fn(params, opt_state, cstate, stacked, mask)
+                lambda p, o, c, mb, b, m: body(p, o, c, mb, b, m), mesh=mesh,
+                in_specs=(pspec, ospec, cspec, mspec, bspec, P()),
+                out_specs=(pspec, ospec, cspec, mspec, P()), **kw)
+            return fn(params, opt_state, cstate, mbuf, stacked, mask)
 
         return core
 
@@ -616,12 +658,12 @@ class MeshExecutor(Executor):
 
         def step(state: HSGDState, batch, mask=None):
             args = () if not masked else (jnp.asarray(mask),)
-            params, opt_state, cstate, metrics = core(
-                state.params, state.opt_state, state.comms,
+            params, opt_state, cstate, mbuf, metrics = core(
+                state.params, state.opt_state, state.comms, state.metrics,
                 jax.tree.map(lambda x: x[None], batch), *args)
             metrics = jax.tree.map(lambda m: m[0], metrics)
             return HSGDState(params, opt_state, state.step + 1,
-                             cstate), metrics
+                             cstate, mbuf), metrics
 
         if not self.plan._jit:
             return step
@@ -638,10 +680,11 @@ class MeshExecutor(Executor):
         def round_fn(state: HSGDState, batches, mask=None):
             stacked = _stack_batches(rnd.n_local, batches)
             args = () if not masked else (jnp.asarray(mask),)
-            params, opt_state, cstate, metrics = core(
-                state.params, state.opt_state, state.comms, stacked, *args)
+            params, opt_state, cstate, mbuf, metrics = core(
+                state.params, state.opt_state, state.comms, state.metrics,
+                stacked, *args)
             state = HSGDState(params, opt_state, state.step + rnd.n_local,
-                              cstate)
+                              cstate, mbuf)
             return state, metrics  # metrics stacked (n_local,) per entry
 
         if not self.plan._jit:

@@ -46,6 +46,9 @@ class HSGDState:
     opt_state: Any   # leading worker axis n
     step: jax.Array  # scalar int32
     comms: Any = None  # codec state (error-feedback residuals), worker axis n
+    metrics: Any = None  # on-device probe buffer (repro.obs.MetricBuffer),
+    #   replicated — None (default) contributes no leaves, so the lowered
+    #   programs are identical to the pre-observability engine
 
 
 # ---------------------------------------------------------------------------
@@ -106,12 +109,24 @@ class HSGD:
     into runtime-mask drops on either executor (the mesh backend lowers the
     mask as a per-worker collective weight; the per-step :meth:`step` path
     ignores the runtime, pass masks there yourself).
+
+    ``metrics`` selects the observability plan
+    (:func:`repro.obs.make_metrics`): None (default) is bitwise-identical
+    to no observability at all — no buffer in the state, no probe in the
+    round body, same lowered jaxpr; ``"on"`` / a :class:`~repro.obs.Metrics`
+    carries an on-device :class:`~repro.obs.MetricBuffer` in the state and
+    pushes the per-level parameter divergences (paper eq. (10): global =
+    upward + downward) at EVERY sync event inside the jitted round body,
+    plus a per-step ``grad_norm`` channel; :meth:`run_rounds` drains the
+    buffer in one device→host transfer at eval boundaries and merges the
+    values into history as ``div_*`` keys (the per-step :meth:`step` path
+    pushes too — drain with :meth:`drain_metrics`).
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
                  topology: Topology, *, aggregate_opt_state: bool = True,
                  jit: bool = True, accum_steps: int = 1, executor=None,
-                 comms=None, runtime=None):
+                 comms=None, runtime=None, metrics=None):
         """accum_steps > 1: each H-SGD iteration accumulates gradients over
         that many microbatches (scan) before the single optimizer update —
         same semantics as one large-batch step (SGD is linear in the
@@ -128,6 +143,8 @@ class HSGD:
         self.comms = make_comms(comms)
         from repro.runtime import make_runtime
         self.runtime = make_runtime(runtime)
+        from repro.obs import make_metrics
+        self.metrics = make_metrics(metrics)
         self._last_clock = None
         from repro.core.executors import make_executor
         self.executor = make_executor(executor)
@@ -144,7 +161,10 @@ class HSGD:
         opt_state = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), opt0)
         cstate = self.comms.init_state(params) if self.comms else None
-        state = HSGDState(params, opt_state, jnp.zeros((), jnp.int32), cstate)
+        mbuf = self.metrics.init_buffer(self.topology) if self.metrics \
+            else None
+        state = HSGDState(params, opt_state, jnp.zeros((), jnp.int32), cstate,
+                          mbuf)
         return self.executor.place(state)
 
     # -- building blocks ------------------------------------------------------
@@ -175,8 +195,17 @@ class HSGD:
                 lambda g, p: (g / accum).astype(p.dtype), gsum, params)
             return grads, jax.tree.map(lambda m: m.mean(0), ms)
 
+        grad_norm = self.metrics is not None and self.metrics.grad_norm
+
         def local_update(params, opt_state, batch):
             grads, metrics = mean_grads(params, batch)
+            if grad_norm:
+                # per-worker gradient l2 norm; executors mean it over the
+                # worker axis like every other per-step metric channel
+                metrics = dict(metrics)
+                metrics["grad_norm"] = jnp.sqrt(sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)))
             updates, opt_state = self.optimizer.update(grads, opt_state, params)
             params = jax.tree.map(jnp.add, params, updates)
             return params, opt_state, metrics
@@ -210,7 +239,7 @@ class HSGD:
     def run_rounds(self, state: HSGDState, batch_fn: Callable[[int], Any],
                    T: int, *, eval_every: int = 0,
                    eval_fn: Optional[Callable[[HSGDState, int], Dict]] = None,
-                   ) -> Tuple[HSGDState, List[Dict]]:
+                   trace=None) -> Tuple[HSGDState, List[Dict]]:
         """Run T steps through the schedule-compiled executor.
 
         Precomputes ``topology.schedule(T)``, folds it into rounds
@@ -237,7 +266,23 @@ class HSGD:
         all host-side numpy next to the static ``wire_bytes``.  An elastic
         policy's deadline drops route the affected rounds through the
         masked executor variant; :meth:`runtime_report` has the final
-        breakdown."""
+        breakdown.
+
+        With metrics enabled (``HSGD(..., metrics="on")``), the in-graph
+        divergence probe pushes one row per sync event into the on-device
+        :class:`~repro.obs.MetricBuffer`; this loop drains the buffer in ONE
+        device→host transfer at eval boundaries (plus before the ring could
+        wrap, and at the end), reattaches each row's (step, level) from the
+        static schedule, and merges the values into the matching records as
+        ``div_global`` / ``div_up_Lℓ`` / ``div_down_Lℓ``.  With a runtime
+        bound, sync-step records also carry ``dropped`` (workers the policy
+        cut from that barrier).  Records are linted against the metrics bus
+        (:func:`repro.obs.validate_record`).
+
+        ``trace`` accepts a :class:`~repro.obs.TraceRecorder`: the runtime
+        clock emits per-worker compute/wait spans and per-level sync spans
+        in simulated time, and drained probe rows become divergence counter
+        tracks; without a runtime, spans fall back to step-index time."""
         t0 = int(state.step)
         cut = eval_every if (eval_fn is not None and eval_every) else 0
         schedule = self.topology.schedule(t0 + T)[t0:]
@@ -250,8 +295,37 @@ class HSGD:
         sim: List[Tuple[float, Dict[str, float]]] = []  # per-step snapshots
         if self.runtime is not None:
             clock = self.runtime.clock(self.topology,
-                                       self._payload_nbytes(state))
+                                       self._payload_nbytes(state),
+                                       recorder=trace)
             self._last_clock = clock
+        probes = (self.metrics is not None and self.metrics.divergences
+                  and state.metrics is not None)
+        div_keys = self.metrics.history_keys(self.topology) if probes else ()
+        cap = state.metrics.capacity if probes else 0
+        pending: List[Tuple[int, int]] = []  # (step, level) since last drain
+        probe_vals: Dict[int, Dict[str, float]] = {}
+        drops: Dict[int, int] = {}
+
+        def ts_of(step_no: int) -> float:
+            return sim[step_no - t0 - 1][0] if clock is not None \
+                else float(step_no)
+
+        def drain(st: HSGDState) -> HSGDState:
+            # one device→host transfer for everything pushed since the last
+            # drain; rows get their (step, level) back from the schedule
+            if not pending:
+                return st
+            mb = jax.device_get(st.metrics)
+            k = int(mb.count)
+            assert k == len(pending) <= cap, (k, len(pending), cap)
+            for (step_no, lvl), row in zip(pending, mb.rows[:k]):
+                vals = {key: float(v) for key, v in zip(div_keys, row)}
+                probe_vals[step_no] = vals
+                if trace is not None:
+                    trace.divergences(step_no, lvl, ts_of(step_no), vals)
+            pending.clear()
+            return dataclasses.replace(st, metrics=st.metrics.reset())
+
         raw: List[Tuple[int, int, Dict]] = []  # (t_end, n_local, metrics)
         evals: Dict[int, Dict] = {}
         t = t0
@@ -266,6 +340,19 @@ class HSGD:
                     mask = clock.sync(rnd.event)
                     # the sync belongs to the round's last step
                     sim[-1] = (clock.time_s, clock.level_seconds())
+            elif trace is not None:
+                # no runtime: keep the trace well-formed in step-index time
+                trace.name_process(0, "engine")
+                trace.name_thread(0, 0, "rounds (step-index time)")
+                trace.complete(f"round x{rnd.n_local}", float(t),
+                               float(rnd.n_local), pid=0, tid=0)
+                if rnd.event is not None:
+                    trace.sync_span(
+                        rnd.event.level, float(t + rnd.n_local), 0.0,
+                        payload_bytes=wire[t + rnd.n_local - t0 - 1]
+                        if wire is not None else 0)
+            if probes and rnd.event is not None and len(pending) >= cap:
+                state = drain(state)   # never let the ring wrap
             if mask is None:
                 state, metrics = self.round_fn(rnd)(state, batches)
             else:
@@ -273,9 +360,18 @@ class HSGD:
                     state, batches, jnp.asarray(mask))
             t += rnd.n_local
             raw.append((t, rnd.n_local, metrics))
+            if rnd.event is not None:
+                if probes:
+                    pending.append((t, rnd.event.level))
+                if clock is not None:
+                    drops[t] = 0 if mask is None else int((~mask).sum())
             if eval_fn is not None and eval_every and \
                     (t % eval_every == 0 or t == t0 + T):
+                if probes:
+                    state = drain(state)
                 evals[t] = eval_fn(state, t - 1)
+        if probes:
+            state = drain(state)
         # metrics stay on device until here so rounds dispatch back-to-back;
         # one bulk transfer at the end instead of a sync per step
         history: List[Dict] = []
@@ -291,9 +387,40 @@ class HSGD:
                     time_s, sync_s = sim[step_no - t0 - 1]
                     rec["sim_time_s"] = round(time_s, 6)
                     rec["sim_sync_s"] = sync_s
+                    if step_no in drops:
+                        rec["dropped"] = drops[step_no]
+                rec.update(probe_vals.get(step_no, {}))
                 rec.update(evals.get(step_no, {}))
                 history.append(rec)
+        if self.metrics is not None:
+            from repro.obs import validate_record
+            for rec in history:
+                errs = validate_record(rec)
+                if errs:
+                    raise ValueError(
+                        "metrics-bus violations in run_rounds history at "
+                        f"t={rec.get('t')}: " + "; ".join(errs))
         return state, history
+
+    def drain_metrics(self, state: HSGDState
+                      ) -> Tuple[HSGDState, List[Dict[str, float]]]:
+        """Drain the probe buffer outside :meth:`run_rounds` (the per-step
+        :meth:`step` path pushes rows but never drains): one device→host
+        transfer, returns ``(state-with-reset-buffer, rows)`` where each row
+        is a ``{div_*: value}`` dict in push order.  If more than
+        ``Metrics.capacity`` rows were pushed since the last drain, only the
+        most recent ``capacity`` survive (the ring wrapped)."""
+        if self.metrics is None or state.metrics is None:
+            return state, []
+        mb = jax.device_get(state.metrics)
+        k = int(mb.count)
+        cap = mb.rows.shape[0]
+        order = range(k) if k <= cap \
+            else [i % cap for i in range(k - cap, k)]
+        keys = self.metrics.history_keys(self.topology)
+        rows = [{key: float(v) for key, v in zip(keys, mb.rows[i])}
+                for i in order]
+        return dataclasses.replace(state, metrics=state.metrics.reset()), rows
 
     # -- inspection ------------------------------------------------------------
     def wire_stats(self, state: HSGDState):
@@ -319,16 +446,19 @@ class HSGD:
         return WireStats(self.topology, tuple(payload), n_elements)
 
     def audit(self, state: HSGDState, batch_fn: Optional[Callable] = None,
-              *, T: Optional[int] = None, config: str = "", waivers=()):
+              *, T: Optional[int] = None, config: str = "", waivers=(),
+              run: bool = True):
         """Static audit of this engine's lowered sync plan
         (:func:`repro.analysis.audit_engine`): traces every distinct
         SyncEvent's aggregation subprogram — and, with ``batch_fn``, every
         distinct Round's fused program — over one global period (or ``T``
         steps) and lints the result (rule catalog in DESIGN.md "Analysis
-        layer").  Returns a :class:`~repro.analysis.SyncPlanReport`."""
+        layer").  ``run=False`` skips the run_rounds execution pass (retrace
+        detection then has no jit-cache numbers — tracing only).  Returns a
+        :class:`~repro.analysis.SyncPlanReport`."""
         from repro.analysis import audit_engine
         return audit_engine(self, state, batch_fn, T=T, config=config,
-                            waivers=waivers)
+                            waivers=waivers, run=run)
 
     def _payload_nbytes(self, state: HSGDState) -> int:
         """Per-worker bytes ONE sync payload puts on the wire — the encoded

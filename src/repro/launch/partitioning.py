@@ -167,7 +167,13 @@ def hsgd_state_shardings(mesh, state: Any):
     The worker-axis order is row-major over the replica axes (outermost
     first) — the same order ``flat_worker_index`` reconstructs inside
     shard_map, which is what lets grouped topologies and runtime masks
-    address 'worker j' consistently on any mesh factorization."""
+    address 'worker j' consistently on any mesh factorization.
+
+    The observability probe buffer (``HSGDState.metrics``) is the one
+    exception: its leading dim is ring capacity, not workers, and its rows
+    are identical on every shard by construction (the probe's last op is a
+    pmean over all replica axes) — it replicates."""
+    from repro.core.hsgd import HSGDState
     from repro.launch.mesh import replica_axes
     rep = replica_axes(mesh)
 
@@ -177,6 +183,14 @@ def hsgd_state_shardings(mesh, state: Any):
             return NamedSharding(mesh, P())
         return NamedSharding(mesh, worker_axis_spec(rep, nd))
 
+    if isinstance(state, HSGDState) and state.metrics is not None:
+        return HSGDState(
+            params=jax.tree.map(one, state.params),
+            opt_state=jax.tree.map(one, state.opt_state),
+            step=NamedSharding(mesh, P()),
+            comms=jax.tree.map(one, state.comms),
+            metrics=jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 state.metrics))
     return jax.tree.map(one, state)
 
 

@@ -18,6 +18,11 @@ per-level links, optional ``--deadline`` elastic participation —
 repro.runtime); telemetry then carries sim_time_s / sim_sync_s and the run
 ends with a runtime breakdown + planner constants fitted from the trace.
 
+``--probes`` turns on the in-graph observability layer (repro.obs): the
+per-level parameter divergences are measured ON device at every sync event
+and drained in bulk — no host gradient recompute, no schedule cut — and
+``--trace out.json`` exports the run as Perfetto/Chrome-trace JSON.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --workers 8 --groups 2 --G 8 --I 2 --steps 60 --batch 4 --seq 64 \
@@ -113,6 +118,23 @@ def build_argparser():
                          "lowered sync plan (per-event sync ops, wire "
                          "dtypes, payload bytes, lint findings) before "
                          "training starts")
+    ap.add_argument("--probes", action="store_true",
+                    help="in-graph observability (repro.obs): carry the "
+                         "on-device divergence probe through training — "
+                         "per-level parameter divergences at every sync "
+                         "event (div_global/div_up_Lℓ/div_down_Lℓ in the "
+                         "JSONL) plus a per-step grad_norm channel, drained "
+                         "in one transfer at telemetry boundaries.  "
+                         "--divergence-every is then satisfied by the "
+                         "probe values (no host gradient recompute, no "
+                         "schedule cut)")
+    ap.add_argument("--trace", default="",
+                    help="export the run as Chrome-trace-event/Perfetto "
+                         "JSON to this path (open in ui.perfetto.dev): "
+                         "per-worker compute/wait spans and per-level sync "
+                         "spans with --runtime, step-index spans without; "
+                         "probe divergences ride along as counter tracks "
+                         "with --probes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -188,7 +210,8 @@ def main(argv=None):
         comms = Comms(args.comms, **kw)
     runtime = make_runtime_model(args, spec.num_levels)
     eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend),
-               comms=comms, runtime=runtime)
+               comms=comms, runtime=runtime,
+               metrics="on" if args.probes else None)
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
     if args.audit:
         # sync-subprogram audit only (no batch_fn): fast, and enough for
@@ -210,7 +233,7 @@ def main(argv=None):
             # feedback from the fresh (zero) state
             state = eng.executor.place(state.__class__(
                 tree["params"], tree["opt"], jnp.asarray(start, jnp.int32),
-                state.comms))
+                state.comms, state.metrics))
             print(f"resumed from step {start}")
         except AssertionError:
             pass
@@ -221,7 +244,11 @@ def main(argv=None):
     # and needs no cut — including it here would degenerate coprime
     # cadences to gcd 1, i.e. per-step dispatch.
     ckpt_every = args.ckpt_every if args.ckpt_dir else 0
-    intervals = [v for v in (args.divergence_every, ckpt_every) if v]
+    # with --probes the in-graph probe supplies divergences at every sync
+    # step (drained in one bulk transfer), so --divergence-every needs
+    # neither the host gradient recompute nor a schedule cut
+    div_every = 0 if args.probes else args.divergence_every
+    intervals = [v for v in (div_every, ckpt_every) if v]
     eval_every = math.gcd(*intervals) if intervals else 0
     # per-level divergence groupings come from the topology (a >2-level
     # schedule reports every internal level, not just level 1)
@@ -231,7 +258,7 @@ def main(argv=None):
     def telemetry(st, t):
         step = t + 1
         rec = {"elapsed_s": round(time.time() - t0, 2)}
-        if args.divergence_every and step % args.divergence_every == 0:
+        if div_every and step % div_every == 0:
             g = per_worker_grads(model.loss, eng.mean_params(st),
                                  stream(10_000_000 + t))
             rec["divergence"] = {f"L{lvl}": all_divergences(g, gr)
@@ -241,9 +268,13 @@ def main(argv=None):
                  {"params": st.params, "opt": st.opt_state})
         return rec
 
+    recorder = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
     state, step_hist = eng.run_rounds(
         state, stream, args.steps - start,
-        eval_every=eval_every, eval_fn=telemetry)
+        eval_every=eval_every, eval_fn=telemetry, trace=recorder)
 
     # un-hooked steps get the elapsed_s of the NEXT measured boundary (the
     # telemetry point whose rounds covered them): an upper bound, and
@@ -254,27 +285,52 @@ def main(argv=None):
         nxt = srec.setdefault("elapsed_s", nxt)
     history = []
     wire_cum = 0
+    if args.probes:
+        from repro.obs import SCHEMA_VERSION, validate_record
+        print(json.dumps({"schema_version": SCHEMA_VERSION,
+                          "probes": True, "backend": args.backend}))
     for srec in step_hist:
         step = srec["t"]
         wire_cum += srec.get("wire_bytes", 0)
         # record log-cadence steps, the final step, and every step that
-        # carries divergence telemetry (its cadence may not align with
-        # --log-every)
+        # carries divergence telemetry — host oracle or in-graph probe
+        # (their cadences may not align with --log-every)
         if step % args.log_every == 0 or step == args.steps \
-                or "divergence" in srec:
+                or "divergence" in srec or "div_global" in srec:
             rec = {"step": step,
                    "loss": srec["ce"],
                    "lvl": spec.sync_level(step - 1),
                    "elapsed_s": srec["elapsed_s"]}
+            if "grad_norm" in srec:
+                rec["grad_norm"] = srec["grad_norm"]
             if comms is not None:
                 rec["wire_cum_bytes"] = wire_cum
             if "sim_time_s" in srec:
                 rec["sim_time_s"] = srec["sim_time_s"]
                 rec["sim_sync_s"] = srec["sim_sync_s"]
+            if "dropped" in srec:
+                rec["dropped"] = srec["dropped"]
+            rec.update({k: v for k, v in srec.items()
+                        if k.startswith("div_")})
             if "divergence" in srec:
                 rec["divergence"] = srec["divergence"]
+            if args.probes:
+                # the launcher's record is fully registered on the metrics
+                # bus: lint strictly (None lvl = between syncs, skipped)
+                errs = validate_record(
+                    {k: v for k, v in rec.items() if v is not None},
+                    strict=True)
+                if errs:
+                    raise SystemExit("metrics-bus violations: "
+                                     + "; ".join(errs))
             history.append(rec)
             print(json.dumps(rec))
+    if recorder is not None:
+        from repro.obs import validate_trace
+        assert not validate_trace(recorder), validate_trace(recorder)
+        recorder.save(args.trace)
+        print(json.dumps({"trace": args.trace,
+                          "trace_events": len(recorder.events)}))
     if runtime is not None:
         # where the simulated time went (makespan, waits, per-level links,
         # drop counts) + the fitted planner constants, closing the loop

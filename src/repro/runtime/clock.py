@@ -95,9 +95,12 @@ class RuntimeModel:
     def elastic(self) -> bool:
         return make_policy(self.policy).elastic
 
-    def clock(self, topology, payload_bytes: int) -> "SimClock":
-        """Bind to a topology + per-worker payload size -> a fresh clock."""
-        return SimClock(self, topology, payload_bytes)
+    def clock(self, topology, payload_bytes: int,
+              recorder=None) -> "SimClock":
+        """Bind to a topology + per-worker payload size -> a fresh clock.
+        ``recorder`` (a :class:`repro.obs.TraceRecorder`) gets per-worker
+        compute/wait spans and per-subtree sync spans in simulated time."""
+        return SimClock(self, topology, payload_bytes, recorder)
 
 
 RuntimeLike = Union[RuntimeModel, None]
@@ -125,10 +128,12 @@ class SimClock:
     (parallel subtrees overlap, so each event counts its link cost once).
     """
 
-    def __init__(self, model: RuntimeModel, topology, payload_bytes: int):
+    def __init__(self, model: RuntimeModel, topology, payload_bytes: int,
+                 recorder=None):
         self.model = model
         self.topology = topology
         self.payload_bytes = int(payload_bytes)
+        self.recorder = recorder  # optional repro.obs.TraceRecorder
         self.n = topology.n
         self.num_levels = len(topology.periods)
         links = model.links if model.links is not None \
@@ -177,6 +182,10 @@ class SimClock:
     def advance(self, t: int) -> None:
         """One local update of step ``t`` on every worker."""
         dt = self.model.compute_s * self.sampler.multipliers(t)
+        if self.recorder is not None:
+            for w in range(self.n):
+                self.recorder.compute_span(w, float(self.clocks[w]),
+                                           float(dt[w]))
         self.clocks += dt
         self.compute_s += dt
 
@@ -211,6 +220,17 @@ class SimClock:
                 mask[members[~made]] = False
             admitted = members[made]
             t_sync = arrivals[made].max() + cost
+            if self.recorder is not None:
+                barrier_open = float(arrivals[made].max())
+                self.recorder.sync_span(
+                    event.level, barrier_open, cost,
+                    payload_bytes=self.payload_bytes,
+                    dropped=int((~made).sum()))
+                for w, arr in zip(admitted, arrivals[made]):
+                    wait = barrier_open - float(arr)
+                    if wait > 0.0:
+                        self.recorder.wait_span(int(w), event.level,
+                                                float(arr), wait)
             self.wait_s[admitted] += t_sync - cost - self.clocks[admitted]
             self.clocks[admitted] = t_sync
             admitted_all[admitted] = True

@@ -1,0 +1,287 @@
+"""repro.obs: in-graph probes, metrics bus, trace exporter.
+
+The contracts under test (DESIGN.md "Observability layer"):
+
+* ``metrics=None`` is bitwise-identical to the metrics-free engine — same
+  trajectory AND the same state leaf count (no buffer in the pytree);
+* the in-graph probe equals the host oracle (`all_divergences`) and
+  satisfies the eq. (10) partition identity; sim and mesh lowerings agree;
+* the probes audit green: R3 (host-free round body) and R6 (zero extra
+  callbacks/transfers, op budget) on the metrics-on configs;
+* the metrics bus validates records (kind mismatches always, unknown keys
+  under strict) and the trace exporter emits schema-valid Chrome JSON.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.divergence import (all_divergences, divergence_stack,
+                                   downward_divergence_avg,
+                                   flatten_pytree_batch, global_divergence,
+                                   partition_divergences,
+                                   partition_divergences_tree,
+                                   upward_divergence)
+from repro.core.hsgd import HSGD
+from repro.core.topology import HierarchySpec, make_topology
+from repro.models.simple import SimpleConfig, SimpleModel
+from repro.obs import (MetricBuffer, Metrics, MetricSpec, TraceRecorder,
+                       make_metrics, register_metric, spec_for,
+                       validate_record, validate_trace)
+from repro.optim.optimizers import sgd
+
+N = 8
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < N,
+    reason=f"mesh tests need {N} devices "
+           f"(XLA_FLAGS=--xla_force_host_platform_device_count={N})")
+
+SPEC = HierarchySpec((2, 2, 2), (8, 4, 2))
+
+
+def tiny_world():
+    topo = make_topology("uniform", spec=SPEC)
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=16, hidden=8,
+                                     num_classes=4))
+    return topo, model
+
+
+def batch_fn(t):
+    x = jax.random.normal(jax.random.PRNGKey(t), (N, 4, 16))
+    return {"x": x, "y": jnp.zeros((N, 4), jnp.int32)}
+
+
+def spread_params(model, scale=0.05, seed=7):
+    params = model.init(jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda x: x + scale * jax.random.normal(
+            jax.random.PRNGKey(seed), (N,) + x.shape), params)
+
+
+# -- MetricBuffer ------------------------------------------------------------
+def test_buffer_push_wrap_reset():
+    buf = MetricBuffer.zeros(3, 2)
+    assert buf.capacity == 3 and int(buf.count) == 0
+    for i in range(4):  # one past capacity: ring wraps
+        buf = buf.push(jnp.full((2,), float(i)))
+    assert int(buf.count) == 4
+    # slot 0 was overwritten by the 4th push (index 3 % 3 == 0)
+    np.testing.assert_allclose(np.asarray(buf.rows)[0], [3.0, 3.0])
+    np.testing.assert_allclose(np.asarray(buf.rows)[1], [1.0, 1.0])
+    buf = buf.reset()
+    assert int(buf.count) == 0 and buf.capacity == 3
+
+
+def test_make_metrics_resolution():
+    assert make_metrics(None) is None
+    assert make_metrics(False) is None
+    assert isinstance(make_metrics(True), Metrics)
+    assert isinstance(make_metrics("on"), Metrics)
+    plan = Metrics(grad_norm=False, capacity=7)
+    assert make_metrics(plan) is plan
+    with pytest.raises(AssertionError):
+        make_metrics("sideways")
+
+
+# -- the probe formulas vs the naive oracle ----------------------------------
+def test_partition_divergences_matches_oracle():
+    topo, model = tiny_world()
+    stacked = spread_params(model)
+    x = flatten_pytree_batch(stacked).astype(jnp.float32)
+    groupings = topo.level_groupings()
+    ordered = [groupings[lvl] for lvl in sorted(groupings)]
+    for row in (partition_divergences(x, ordered),
+                partition_divergences_tree(stacked, ordered)):
+        row = np.asarray(row)
+        np.testing.assert_allclose(row[0], float(global_divergence(x)),
+                                   rtol=1e-4)
+        for i, g in enumerate(ordered):
+            np.testing.assert_allclose(row[1 + 2 * i],
+                                       float(upward_divergence(x, g)),
+                                       rtol=1e-4)
+            np.testing.assert_allclose(row[2 + 2 * i],
+                                       float(downward_divergence_avg(x, g)),
+                                       rtol=1e-4, atol=1e-9)
+
+
+def test_divergence_stack_matches_all_divergences():
+    topo, model = tiny_world()
+    x = flatten_pytree_batch(spread_params(model)).astype(jnp.float32)
+    g = topo.level_groupings()[1]
+    vals = np.asarray(divergence_stack(x, g))
+    d = all_divergences(x, g)
+    np.testing.assert_allclose(
+        vals, [d["global"], d["upward"], d["downward_avg"],
+               d["downward_max"]], rtol=1e-6)
+
+
+def test_probe_row_is_transfer_free():
+    topo, model = tiny_world()
+    stacked = spread_params(model)
+    jaxpr = jax.make_jaxpr(Metrics().sim_row_fn(topo))(stacked)
+    assert "device_put" not in str(jaxpr)
+
+
+# -- live engine probes ------------------------------------------------------
+def run_probed(backend="sim", metrics="on", T=8):
+    topo, model = tiny_world()
+    eng = HSGD(model.loss, sgd(0.1), topo, executor=backend, metrics=metrics)
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    st, hist = eng.run_rounds(st, batch_fn, T)
+    return eng, st, hist
+
+
+def test_metrics_off_is_bitwise_identical():
+    _, st_off, hist_off = run_probed(metrics=None)
+    _, st_on, hist_on = run_probed(metrics="on")
+    for a, b in zip(jax.tree.leaves(st_off.params),
+                    jax.tree.leaves(st_on.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # metrics=None leaves NO extra leaves in the state pytree
+    assert st_off.metrics is None
+    assert len(jax.tree.leaves(st_off)) + 2 == len(jax.tree.leaves(st_on))
+    # ... and no probe keys in history
+    assert not any(k.startswith("div_") or k == "grad_norm"
+                   for rec in hist_off for k in rec)
+
+
+def test_probe_history_matches_host_oracle_and_eq10():
+    eng, st, hist = run_probed()
+    sync = [r for r in hist if "div_global" in r]
+    assert [r["t"] for r in sync] == [2, 4, 6, 8]  # every sync event
+    for rec in sync:
+        for lvl in (1, 2):
+            resid = (rec["div_global"] - rec[f"div_up_L{lvl}"]
+                     - rec[f"div_down_L{lvl}"])
+            assert abs(resid) <= 1e-4 * max(rec["div_global"], 1e-8)
+    # every step carries the grad_norm channel
+    assert all("grad_norm" in r and r["grad_norm"] > 0 for r in hist)
+
+
+def test_step_path_pushes_and_drain_metrics():
+    topo, model = tiny_world()
+    eng = HSGD(model.loss, sgd(0.1), topo, metrics="on")
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    for t in range(4):  # two sync events (period 2)
+        st, _ = eng.step(st, batch_fn(t))
+    assert int(jax.device_get(st.metrics.count)) == 2
+    st, rows = eng.drain_metrics(st)
+    assert int(jax.device_get(st.metrics.count)) == 0
+    assert len(rows) == 2
+    keys = set(eng.metrics.history_keys(topo))
+    assert all(set(r) == keys for r in rows)
+    # drained values are the oracle divergences of the pre-sync params
+    # (cheap sanity: non-negative, partition identity)
+    for r in rows:
+        assert r["div_global"] >= 0
+        assert abs(r["div_global"] - r["div_up_L1"] - r["div_down_L1"]) \
+            <= 1e-4 * max(r["div_global"], 1e-8)
+
+
+@needs_devices
+def test_sim_mesh_probe_parity():
+    _, _, hist_sim = run_probed("sim")
+    _, _, hist_mesh = run_probed("mesh")
+    sim = [r for r in hist_sim if "div_global" in r]
+    mesh = [r for r in hist_mesh if "div_global" in r]
+    assert len(sim) == len(mesh) == 4
+    for s, m in zip(sim, mesh):
+        for k in (k for k in s if k.startswith("div_")):
+            assert abs(s[k] - m[k]) <= 1e-4 * max(abs(s[k]), 1e-8), (k, s, m)
+
+
+@needs_devices
+def test_mesh_metrics_off_is_bitwise_identical():
+    _, st_off, _ = run_probed("mesh", metrics=None)
+    _, st_on, _ = run_probed("mesh", metrics="on")
+    for a, b in zip(jax.tree.leaves(st_off.params),
+                    jax.tree.leaves(st_on.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# -- the R3/R6 audit contract ------------------------------------------------
+def test_probes_audit_r3_r6_green():
+    topo, model = tiny_world()
+    eng = HSGD(model.loss, sgd(0.1), topo, metrics="on")
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    report = eng.audit(st, batch_fn=batch_fn, run=False)
+    assert report.probes is not None
+    assert not [f for f in report.findings if f.rule in ("R3", "R6")], \
+        report.findings
+    budget = report.probes["budget"]
+    for key, d in report.probes["rounds"].items():
+        assert d["extra_callbacks"] == 0 and d["extra_transfers"] == 0, key
+        assert 0 < d["extra_ops"] <= budget, (key, d, budget)
+
+
+def test_op_budget_shape():
+    topo, _ = tiny_world()
+    m = Metrics()
+    assert m.op_budget("mesh", topo, 4) == (2 + 2) + 1  # L+2 + grad_norm
+    assert m.op_budget("sim", topo, 4) == 3 * 4 * 3 + 5
+    off = Metrics(divergences=False, grad_norm=False)
+    assert off.op_budget("sim", topo, 4) == 0
+
+
+# -- metrics bus -------------------------------------------------------------
+def test_bus_registry_and_validation():
+    assert spec_for("div_up_L3").kind == "scalar"  # fnmatch family
+    assert spec_for("sim_sync_s").kind == "mapping"
+    assert spec_for("no_such_channel") is None
+    ok = {"t": 3, "ce": 1.25, "div_global": 0.1, "grad_norm": 2.0,
+          "wire_bytes": 128, "sim_sync_s": {"L1": 0.2}}
+    assert validate_record(ok) == []
+    assert validate_record(ok, strict=True) == []
+    bad = {"t": 1.5, "sim_sync_s": 3.0, "dropped": True}
+    errs = validate_record(bad)
+    assert len(errs) == 3
+    # unknown keys: lenient passes, strict complains
+    assert validate_record({"my_custom": 1.0}) == []
+    assert validate_record({"my_custom": 1.0}, strict=True)
+    with pytest.raises(ValueError):
+        register_metric(MetricSpec("t"))  # duplicate without overwrite
+
+
+# -- trace exporter ----------------------------------------------------------
+def test_trace_export_schema():
+    rec = TraceRecorder()
+    rec.compute_span(0, 0.0, 1.0)
+    rec.wait_span(0, 2, 1.0, 0.5)
+    rec.sync_span(2, 1.5, 0.25, payload_bytes=1024, dropped=1)
+    rec.divergences(4, 2, 1.75, {"global": 0.5, "up_L1": 0.2})
+    obj = rec.to_json()
+    assert validate_trace(rec) == []
+    assert validate_trace(obj) == []
+    assert obj["otherData"]["exporter"] == "repro.obs"
+    phases = {e["ph"] for e in obj["traceEvents"]}
+    assert {"X", "C", "i", "M"} <= phases
+
+
+def test_trace_validation_catches_malformed():
+    assert validate_trace([1, 2, 3])
+    assert validate_trace({"events": []})
+    bad_phase = {"traceEvents": [
+        {"name": "x", "ph": "Q", "pid": 0, "tid": 0, "ts": 0}]}
+    assert any("phase" in e for e in validate_trace(bad_phase))
+    neg = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 0, "tid": 0, "ts": -1, "dur": 1}]}
+    assert any("ts" in e for e in validate_trace(neg))
+    no_dur = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 0, "tid": 0, "ts": 0}]}
+    assert any("dur" in e for e in validate_trace(no_dur))
+
+
+def test_run_rounds_trace_fallback_spans():
+    topo, model = tiny_world()
+    eng = HSGD(model.loss, sgd(0.1), topo, comms="identity", metrics="on")
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    rec = TraceRecorder()
+    st, hist = eng.run_rounds(st, batch_fn, 8, trace=rec)
+    assert validate_trace(rec) == []
+    names = [e["name"] for e in rec.events]
+    assert any(n.startswith("round") for n in names)   # step-index spans
+    assert any(n.startswith("sync L") for n in names)
+    assert any(e["ph"] == "C" for e in rec.events)     # divergence counters
+    syncs = [e for e in rec.events
+             if e["ph"] == "X" and e["name"].startswith("sync L")]
+    assert all(e["args"]["payload_bytes"] > 0 for e in syncs)

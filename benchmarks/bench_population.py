@@ -1,0 +1,234 @@
+"""Population-regime benchmark: virtual-client sampling cost vs population.
+
+The population layer's contract is that a round costs O(k) — k = topology.n
+active slots — no matter how many virtual clients stand behind it.  This
+benchmark sweeps the declared population 10^3..10^6 over a fixed k=8
+two-level topology and records, per population size:
+
+* wall time per training step through the sampled loop (hydrate + G inner
+  steps + fold-back) vs the materialized n=k baseline engine running the
+  same steps — their ratio is the *population overhead* (hydrate/fold/draw);
+* the hydrated (k, ...) state bytes — **asserted identical across the whole
+  sweep and equal to the baseline's**, the deterministic proof that peak
+  state memory is bounded by k, not the population;
+* the host-side draw time and the sampled-clients ledger size.
+
+Deterministic CI assertions (the repo's jaxpr-not-wall-clock rule: numbers
+ride along, proofs don't time anything):
+
+* state bytes are population-independent (above);
+* with cells == group_sizes (k == population) and uniform weights, the
+  sampled loop's server params are BITWISE the baseline engine's global
+  mean — fold-back IS the level-1 sync;
+* ``--backend both`` additionally runs one sweep point through the
+  shard_map backend in exact mode and asserts the server params are
+  bitwise the sim loop's (needs 8 devices).
+
+Emits ``BENCH_population.json``; the CI legs run ``--smoke`` (1-device leg:
+sim; 8-device leg: ``--backend both``) and upload it.
+
+    PYTHONPATH=src python benchmarks/bench_population.py [--smoke]
+        [--backend sim|mesh|both] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core import EngineConfig, HSGD, HierarchySpec, make_topology
+from repro.data import PopulationShards
+from repro.models import SimpleConfig, SimpleModel
+from repro.obs import SCHEMA_VERSION
+from repro.optim import sgd
+from repro.population import Population
+
+GS, PERIODS = (2, 4), (4, 2)     # k = 8 slots, G = 4 steps per round
+K = 8
+DIM, CLASSES, HIDDEN, BS = 24, 10, 32, 10
+LR = 0.08
+SEED = 11
+
+# population sweep: per-level cell fanouts, 10^3 .. 10^6 virtual clients
+SWEEP = {
+    1_000: (10, 100),
+    10_000: (100, 100),
+    100_000: (100, 1_000),
+    1_000_000: (1_000, 1_000),
+}
+
+
+def make_world():
+    model = SimpleModel(SimpleConfig(kind="mlp", input_dim=DIM,
+                                     hidden=HIDDEN, num_classes=CLASSES))
+    shards = PopulationShards(population=max(SWEEP), num_classes=CLASSES,
+                              dim=DIM, seed=SEED)
+    return model, shards
+
+
+def state_bytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))
+
+
+def tree_equal(a, b):
+    return all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)))
+
+
+def make_mesh_executor():
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_host_mesh
+    return MeshExecutor(make_host_mesh(group_sizes=GS), exact=True)
+
+
+def batch_fn(shards):
+    return lambda ids, t: jax.tree.map(
+        jnp.asarray, shards.batch(np.asarray(ids) % max(SWEEP), t, BS))
+
+
+def bench_baseline(model, shards, rounds: int):
+    """The materialized n=k engine on the same steps — the denominator of
+    the population-overhead ratio, and the state-bytes reference."""
+    eng = HSGD(model.loss, sgd(LR), make_topology("uniform",
+                                                  spec=HierarchySpec(GS,
+                                                                     PERIODS)),
+               EngineConfig())
+    st = eng.init(jax.random.PRNGKey(0), model.init)
+    bf = batch_fn(shards)
+    batch = lambda t: bf(np.arange(K), t)
+    T = rounds * PERIODS[0]
+    st, _ = eng.run_rounds(st, batch, T)       # warmup: compile every round
+    jax.block_until_ready(st.params)
+    t0 = time.time()
+    st, _ = eng.run_rounds(st, batch, T)
+    jax.block_until_ready(st.params)
+    dt = time.time() - t0
+    return {"time_per_step_s": round(dt / T, 6),
+            "state_bytes": state_bytes((st.params, st.opt_state))}, st
+
+
+def bench_population(model, shards, cells, rounds: int, executor=None):
+    eng = HSGD(model.loss, sgd(LR),
+               make_topology("uniform", spec=HierarchySpec(GS, PERIODS)),
+               EngineConfig(executor=executor,
+                            population=Population(cells=cells, seed=SEED)))
+    popeng = eng.population_engine()
+    server = eng.init_server(jax.random.PRNGKey(0), model.init)
+    hydrated = popeng.hydrate(server)
+    sb = state_bytes((hydrated.params, hydrated.opt_state))
+
+    t0 = time.time()
+    draws = [popeng.sampler.draw(r) for r in range(rounds)]
+    draw_s = time.time() - t0
+    assert all(d.client_ids.size == K for d in draws)
+
+    bf = batch_fn(shards)
+    T = rounds * PERIODS[0]
+    server, _ = eng.run_sampled(server, bf, rounds)   # warmup + compile
+    jax.block_until_ready(server.params)
+    t0 = time.time()
+    server, hist = eng.run_sampled(server, bf, rounds)
+    jax.block_until_ready(server.params)
+    dt = time.time() - t0
+    return {"cells": list(cells),
+            "time_per_step_s": round(dt / T, 6),
+            "draw_ms_per_round": round(1e3 * draw_s / rounds, 4),
+            "state_bytes": sb,
+            "unique_clients": hist[-1]["participation"]["unique"]}, server
+
+
+def main(quick: bool = True, out: str = "BENCH_population.json",
+         backend: str = "sim") -> dict:
+    mesh = backend in ("mesh", "both")
+    if mesh and len(jax.devices()) < 8:
+        raise SystemExit(
+            "--backend mesh needs 8 devices: export "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+            "initializes (the CI 8-device leg does)")
+    model, shards = make_world()
+    rounds = 2 if quick else 8
+    base, base_st = bench_baseline(model, shards, rounds)
+    report = {"schema_version": SCHEMA_VERSION, "k": K,
+              "group_sizes": list(GS), "periods": list(PERIODS),
+              "rounds": rounds, "backend": backend, "baseline": base,
+              "sweep": {}}
+
+    for popsize, cells in SWEEP.items():
+        print(f"... population {popsize} (cells {cells})")
+        rec, _ = bench_population(model, shards, cells, rounds)
+        rec["overhead_vs_baseline"] = round(
+            rec["time_per_step_s"] / base["time_per_step_s"], 4)
+        report["sweep"][str(popsize)] = rec
+
+    # deterministic proof 1: peak state memory is bounded by k — identical
+    # across a 1000x population sweep, and exactly the baseline's
+    sizes = {r["state_bytes"] for r in report["sweep"].values()}
+    assert sizes == {base["state_bytes"]}, (sizes, base["state_bytes"])
+
+    # deterministic proof 2: cells == group_sizes (k == population) with
+    # uniform weights is BITWISE the materialized engine (fold-back IS the
+    # level-1 sync).  Rebuild the baseline trajectory to compare end states.
+    eng = HSGD(model.loss, sgd(LR),
+               make_topology("uniform", spec=HierarchySpec(GS, PERIODS)),
+               EngineConfig(population=Population(cells=GS, seed=SEED)))
+    server = eng.init_server(jax.random.PRNGKey(0), model.init)
+    server, _ = eng.run_sampled(server, batch_fn(shards), 2 * rounds)
+    beng = HSGD(model.loss, sgd(LR),
+                make_topology("uniform", spec=HierarchySpec(GS, PERIODS)),
+                EngineConfig())
+    bst = beng.init(jax.random.PRNGKey(0), model.init)
+    bf = batch_fn(shards)
+    bst, _ = beng.run_rounds(bst, lambda t: bf(np.arange(K), t),
+                             2 * rounds * PERIODS[0])
+    row0 = jax.tree.map(lambda x: np.asarray(x)[0], bst.params)
+    assert tree_equal(row0, server.params), \
+        "k == population sampled loop diverged from the materialized engine"
+    report["bitwise_k_eq_population"] = True
+
+    if mesh:
+        # deterministic proof 3: the mesh backend (exact mode) runs the
+        # sampled loop bitwise-identical to sim — same draws, same fold
+        cells = SWEEP[1_000_000]
+        rec_sim, srv_sim = bench_population(model, shards, cells, rounds)
+        rec_mesh, srv_mesh = bench_population(model, shards, cells, rounds,
+                                              executor=make_mesh_executor())
+        assert tree_equal(srv_sim.params, srv_mesh.params), \
+            "mesh(exact) sampled loop diverged from sim"
+        report["mesh"] = dict(rec_mesh, backend="mesh(exact)",
+                              params_bitwise_vs_sim=True)
+
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out}")
+    summary = {p: r["overhead_vs_baseline"]
+               for p, r in report["sweep"].items()}
+    print(json.dumps({"overhead_vs_baseline": summary}))
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: fewer rounds (the memory/bitwise proofs "
+                         "are deterministic either way; only the recorded "
+                         "timings get noisier)")
+    ap.add_argument("--full", action="store_true", help="longer runs")
+    ap.add_argument("--backend", default="sim",
+                    choices=["sim", "mesh", "both"],
+                    help="'mesh'/'both' additionally runs the 10^6 sweep "
+                         "point through the shard_map backend (exact mode) "
+                         "and asserts the server params are bitwise the sim "
+                         "loop's (needs 8 devices)")
+    ap.add_argument("--out", default="BENCH_population.json")
+    args = ap.parse_args()
+    main(quick=args.smoke or not args.full, out=args.out,
+         backend=args.backend)

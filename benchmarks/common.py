@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HSGD, HierarchySpec, make_topology
+from repro.core import EngineConfig, HSGD, HierarchySpec, make_topology
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
@@ -28,8 +28,9 @@ def make_world(n_workers: int = 8, num_classes: int = 8, dim: int = 24,
     x, y = make_classification(seed, num_classes=num_classes, dim=dim,
                                per_class=80, spread=1.5)
     parts = label_shard_partition(
-        y, [[j % num_classes] for j in range(n_workers)])
-    ds = FederatedDataset(x, y, parts)
+        y, [[j % num_classes] for j in range(n_workers)],
+        n_workers=n_workers)
+    ds = FederatedDataset(x, y, parts).require_workers(n_workers)
     model = SimpleModel(SimpleConfig(kind="mlp", input_dim=dim, hidden=32,
                                      num_classes=num_classes))
     return ds, model
@@ -47,8 +48,9 @@ def trajectory(ds, model, topology, T: int, lr: float = 0.08, seed: int = 0,
     ``metrics`` the in-graph probe plan ("on" / repro.obs.Metrics)."""
     if isinstance(topology, HierarchySpec):
         topology = make_topology(topology)
-    eng = HSGD(model.loss, sgd(lr), topology, jit=True, executor=backend,
-               comms=comms, metrics=metrics)
+    eng = HSGD(model.loss, sgd(lr), topology,
+               EngineConfig(jit=True, executor=backend, comms=comms,
+                            metrics=metrics))
     st = eng.init(jax.random.PRNGKey(seed), model.init)
     gb = jax.tree.map(jnp.asarray, ds.global_batch(640))
 
@@ -82,8 +84,9 @@ def steps_per_sec(ds, model, topology, T: int = 256, lr: float = 0.08,
     metrics probe plan (``metrics="on"`` for the R6 overhead contract)."""
     if isinstance(topology, HierarchySpec):
         topology = make_topology(topology)
-    eng = HSGD(model.loss, sgd(lr), topology, jit=True, executor=backend,
-               comms=comms, metrics=metrics)
+    eng = HSGD(model.loss, sgd(lr), topology,
+               EngineConfig(jit=True, executor=backend, comms=comms,
+                            metrics=metrics))
     st = eng.init(jax.random.PRNGKey(0), model.init)
     # warmup must span >= one full global period so EVERY step/round
     # signature compiles before the timed region, and end on a period

@@ -5,22 +5,26 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import HSGD, make_topology
+from repro.core import EngineConfig, HSGD, make_topology
 from repro.data import FederatedDataset, label_shard_partition, make_classification
 from repro.models import SimpleConfig, SimpleModel
 from repro.optim import sgd
 
 # 8 workers, each holding ONE class of a 8-class problem (maximally non-IID)
 x, y = make_classification(seed=0, num_classes=8, dim=24, per_class=80)
-ds = FederatedDataset(x, y, label_shard_partition(y, [[j] for j in range(8)]))
+ds = FederatedDataset(x, y, label_shard_partition(y, [[j] for j in range(8)],
+                                                  n_workers=8))
+ds.require_workers(8)  # fail here, not as a shape error mid-round
 
 model = SimpleModel(SimpleConfig(kind="mlp", input_dim=24, hidden=32,
                                  num_classes=8))
 
 # H-SGD: 2 groups x 4 workers; local aggregation every I=4 steps (cheap,
-# within a group), global aggregation every G=16 steps (expensive)
+# within a group), global aggregation every G=16 steps (expensive).
+# EngineConfig() is where every pluggable subsystem goes (executor, comms,
+# runtime, metrics, population) — the defaults are the plain engine.
 topology = make_topology("two_level", n=8, N=2, G=16, I=4)
-engine = HSGD(model.loss, sgd(0.08), topology)
+engine = HSGD(model.loss, sgd(0.08), topology, EngineConfig())
 state = engine.init(jax.random.PRNGKey(0), model.init)
 
 gb = jax.tree.map(jnp.asarray, ds.global_batch())

@@ -102,15 +102,11 @@ def _metrics_off_twin(eng):
     settings) — the R6 baseline the metrics-on round bodies are diffed
     against."""
     from repro.core.hsgd import HSGD
-    ex = eng.executor
-    if getattr(ex, "mesh", None) is not None:
-        twin_ex = type(ex)(mesh=ex.mesh, exact=ex.exact)
-    else:
-        twin_ex = type(ex)()
     return HSGD(eng.loss_fn, eng.optimizer, eng.topology,
-                aggregate_opt_state=eng.aggregate_opt_state, jit=eng._jit,
-                accum_steps=eng.accum_steps, executor=twin_ex,
-                comms=eng.comms, runtime=eng.runtime, metrics=None)
+                dataclasses.replace(eng.config, metrics=None,
+                                    executor=eng.executor.twin(),
+                                    comms=eng.comms, runtime=eng.runtime,
+                                    population=None))
 
 
 def audit_engine(eng, state, batch_fn: Optional[Callable[[int], Any]] = None,

@@ -16,7 +16,8 @@ from repro.core.grouping import (Grouping, contiguous, diversity_grouping,
                                  group_iid, group_noniid, random_grouping,
                                  sample_participation)
 from repro.core.hierarchy import HierarchySpec, local_sgd, two_level
-from repro.core.hsgd import (HSGD, HSGDState, Round, compile_schedule, run)
+from repro.core.hsgd import (HSGD, EngineConfig, HSGDState, Round,
+                             compile_schedule, run)
 from repro.core.executors import (Executor, MeshExecutor, SimExecutor,
                                   make_executor, register_executor)
 from repro.core.planner import (CommModel, PlanPoint, best_under_budget,
@@ -27,7 +28,7 @@ from repro.core.topology import (GroupedTopology, SyncEvent, Topology,
                                  register_topology)
 
 __all__ = [
-    "HSGD", "HSGDState", "Round", "compile_schedule", "run",
+    "HSGD", "EngineConfig", "HSGDState", "Round", "compile_schedule", "run",
     "Executor", "SimExecutor", "MeshExecutor", "make_executor",
     "register_executor",
     "Topology", "SyncEvent", "GroupedTopology", "UniformTopology",

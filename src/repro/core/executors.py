@@ -72,6 +72,12 @@ class Executor(abc.ABC):
     def _validate(self) -> None:
         """Check the bound plan is executable on this backend (fail fast)."""
 
+    def twin(self) -> "Executor":
+        """A fresh UNBOUND executor with this one's settings, for derived
+        engines (the analysis layer's metrics-off twin, the population
+        engine's inner engine) — one executor instance serves one engine."""
+        return type(self)()
+
     def place(self, state: HSGDState) -> HSGDState:
         """Move a freshly initialized state onto this backend's layout."""
         return state
@@ -412,6 +418,9 @@ class MeshExecutor(Executor):
         self.mesh = mesh
         self.exact = exact
         self.rep_axes = None
+
+    def twin(self) -> "MeshExecutor":
+        return MeshExecutor(mesh=self.mesh, exact=self.exact)
 
     def _validate(self) -> None:
         from repro.launch.mesh import (make_hsgd_mesh, n_replicas,

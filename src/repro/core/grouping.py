@@ -26,6 +26,22 @@ class Grouping:
         ids = np.unique(a)
         assert (ids == np.arange(len(ids))).all(), "group ids must be dense"
 
+    @classmethod
+    def from_labels(cls, labels) -> "Grouping":
+        """Grouping from arbitrary per-worker labels (dense-relabelled in
+        order of first appearance).  This is how a population draw becomes
+        a Theorem-2 regrouping: label each sampled slot with its drawn cell
+        id and the round's random assignment of population members to
+        groups falls out (``Draw.grouping`` does exactly this)."""
+        labels = np.asarray(labels)
+        assert labels.ndim == 1 and len(labels) > 0, labels.shape
+        _, ids = np.unique(labels, return_inverse=True)
+        first = {}
+        dense = np.empty(len(labels), np.int64)
+        for j, g in enumerate(ids):
+            dense[j] = first.setdefault(int(g), len(first))
+        return cls(tuple(dense))
+
     @property
     def n(self) -> int:
         return len(self.assignment)

@@ -30,6 +30,7 @@ schedule into rounds and fuses each pure-local block into a single jitted
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -37,6 +38,57 @@ import jax.numpy as jnp
 
 from repro.core.topology import SyncEvent, Topology
 from repro.optim.optimizers import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Typed engine configuration: every pluggable subsystem in one frozen
+    object instead of the kwarg sprawl ``HSGD(..., comms=..., runtime=...,
+    metrics=..., executor=...)`` grew across PRs 2–8.
+
+    Each subsystem field takes whatever its ``make_*`` factory accepts —
+    None, a registered name, or an instance: ``executor``
+    (:func:`repro.core.executors.make_executor`), ``comms``
+    (:func:`repro.comms.make_comms`), ``runtime``
+    (:func:`repro.runtime.make_runtime`), ``metrics``
+    (:func:`repro.obs.make_metrics`), ``population``
+    (:func:`repro.population.make_population` — binding one switches the
+    engine into the sampled-participation regime, see
+    :meth:`HSGD.run_sampled`).  The scalar engine options
+    (``aggregate_opt_state`` / ``jit`` / ``accum_steps``) live here too so
+    one object round-trips a full engine setup (the train CLI echoes it
+    into the JSONL header).
+
+    The legacy keywords still work via a deprecation shim (tested), so
+    ``HSGD(loss, opt, topo, comms="topk")`` and
+    ``HSGD(loss, opt, topo, EngineConfig(comms="topk"))`` build the same
+    engine.
+    """
+    executor: Any = None
+    comms: Any = None
+    runtime: Any = None
+    metrics: Any = None
+    population: Any = None
+    aggregate_opt_state: bool = True
+    jit: bool = True
+    accum_steps: int = 1
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-able summary (the train CLI's JSONL ``config`` line)."""
+        def show(v):
+            if v is None or isinstance(v, (str, int, float, bool)):
+                return v
+            d = getattr(v, "describe", None)
+            return d() if callable(d) else repr(v)
+        return {f.name: show(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+
+_UNSET = object()
+# kwargs the shim still accepts; the subsystem ones warn, the scalar ones
+# (plain engine options, no sprawl history) fold in silently
+_SUBSYSTEM_KWARGS = ("executor", "comms", "runtime", "metrics", "population")
+_SCALAR_KWARGS = ("aggregate_opt_state", "jit", "accum_steps")
 
 
 @jax.tree_util.register_dataclass
@@ -124,31 +176,72 @@ class HSGD:
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
-                 topology: Topology, *, aggregate_opt_state: bool = True,
-                 jit: bool = True, accum_steps: int = 1, executor=None,
-                 comms=None, runtime=None, metrics=None):
-        """accum_steps > 1: each H-SGD iteration accumulates gradients over
+                 topology: Topology, config: Optional[EngineConfig] = None,
+                 *, aggregate_opt_state=_UNSET, jit=_UNSET,
+                 accum_steps=_UNSET, executor=_UNSET, comms=_UNSET,
+                 runtime=_UNSET, metrics=_UNSET, population=_UNSET):
+        """Subsystems come from ``config`` (an :class:`EngineConfig`); the
+        pre-config keywords still work through a deprecation shim but may
+        not be mixed with ``config``.
+
+        accum_steps > 1: each H-SGD iteration accumulates gradients over
         that many microbatches (scan) before the single optimizer update —
         same semantics as one large-batch step (SGD is linear in the
         gradient; tested), peak activation memory divided by accum_steps."""
+        overrides = {k: v for k, v in [
+            ("aggregate_opt_state", aggregate_opt_state), ("jit", jit),
+            ("accum_steps", accum_steps), ("executor", executor),
+            ("comms", comms), ("runtime", runtime), ("metrics", metrics),
+            ("population", population)] if v is not _UNSET}
+        if overrides and config is not None:
+            raise TypeError(
+                f"HSGD got both config= and the keyword(s) "
+                f"{sorted(overrides)}; move them into "
+                f"EngineConfig({', '.join(sorted(overrides))}=...)")
+        if config is None:
+            legacy = sorted(k for k in overrides if k in _SUBSYSTEM_KWARGS)
+            if legacy:
+                warnings.warn(
+                    f"HSGD({', '.join(k + '=...' for k in legacy)}) keyword"
+                    f"{'s are' if len(legacy) > 1 else ' is'} deprecated; "
+                    f"pass HSGD(loss_fn, optimizer, topology, "
+                    f"EngineConfig({', '.join(k + '=...' for k in legacy)}))",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**overrides)
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.topology = topology
-        self.aggregate_opt_state = aggregate_opt_state
-        self._jit = jit
-        self.accum_steps = accum_steps
+        self.config = config
+        self.aggregate_opt_state = config.aggregate_opt_state
+        self._jit = config.jit
+        self.accum_steps = config.accum_steps
         # local imports: executors imports this module for HSGDState/Round,
         # and comms/runtime reach back into core.topology
         from repro.comms import make_comms
-        self.comms = make_comms(comms)
+        self.comms = make_comms(config.comms)
         from repro.runtime import make_runtime
-        self.runtime = make_runtime(runtime)
+        self.runtime = make_runtime(config.runtime)
         from repro.obs import make_metrics
-        self.metrics = make_metrics(metrics)
+        self.metrics = make_metrics(config.metrics)
+        from repro.population import make_population
+        self.population = make_population(config.population)
+        self._population_engine = None
         self._last_clock = None
         from repro.core.executors import make_executor
-        self.executor = make_executor(executor)
+        self.executor = make_executor(config.executor)
         self.executor.bind(self)
+
+    # -- participation (one protocol over the grown surfaces) ---------------
+    def participation(self, clock=None, extra=None):
+        """This engine's composed :class:`~repro.population.Participation`
+        view: the topology's static event masks, plus the elastic adapter
+        when a live clock is passed, plus ``extra`` (e.g. the population
+        engine's per-round pinned sampler)."""
+        from repro.population import (ElasticParticipation,
+                                      StaticParticipation, compose)
+        return compose(StaticParticipation(self.topology), extra,
+                       ElasticParticipation(clock)
+                       if clock is not None else None)
 
     # -- init ---------------------------------------------------------------
     def init(self, key, model_init: Callable[[jax.Array], Any]) -> HSGDState:
@@ -239,7 +332,8 @@ class HSGD:
     def run_rounds(self, state: HSGDState, batch_fn: Callable[[int], Any],
                    T: int, *, eval_every: int = 0,
                    eval_fn: Optional[Callable[[HSGDState, int], Dict]] = None,
-                   trace=None) -> Tuple[HSGDState, List[Dict]]:
+                   trace=None, participation=None
+                   ) -> Tuple[HSGDState, List[Dict]]:
         """Run T steps through the schedule-compiled executor.
 
         Precomputes ``topology.schedule(T)``, folds it into rounds
@@ -282,7 +376,14 @@ class HSGD:
         ``trace`` accepts a :class:`~repro.obs.TraceRecorder`: the runtime
         clock emits per-worker compute/wait spans and per-level sync spans
         in simulated time, and drained probe rows become divergence counter
-        tracks; without a runtime, spans fall back to step-index time."""
+        tracks; without a runtime, spans fall back to step-index time.
+
+        ``participation`` accepts an extra
+        :class:`~repro.population.Participation` composed with the engine's
+        own (topology static masks + the elastic clock): each executed
+        sync consults ``round_mask`` once, and a non-None mask routes the
+        round through the masked executor variant — this is how the
+        population engine masks a draw's empty slots out of every sync."""
         t0 = int(state.step)
         cut = eval_every if (eval_fn is not None and eval_every) else 0
         schedule = self.topology.schedule(t0 + T)[t0:]
@@ -298,6 +399,8 @@ class HSGD:
                                        self._payload_nbytes(state),
                                        recorder=trace)
             self._last_clock = clock
+        parts = self.participation(clock=clock, extra=participation) \
+            if (clock is not None or participation is not None) else None
         probes = (self.metrics is not None and self.metrics.divergences
                   and state.metrics is not None)
         div_keys = self.metrics.history_keys(self.topology) if probes else ()
@@ -337,10 +440,12 @@ class HSGD:
                     clock.advance(t + i)
                     sim.append((clock.time_s, clock.level_seconds()))
                 if rnd.event is not None:
-                    mask = clock.sync(rnd.event)
+                    mask = parts.round_mask(rnd.event)
                     # the sync belongs to the round's last step
                     sim[-1] = (clock.time_s, clock.level_seconds())
-            elif trace is not None:
+            elif parts is not None and rnd.event is not None:
+                mask = parts.round_mask(rnd.event)
+            if clock is None and trace is not None:
                 # no runtime: keep the trace well-formed in step-index time
                 trace.name_process(0, "engine")
                 trace.name_thread(0, 0, "rounds (step-index time)")
@@ -421,6 +526,42 @@ class HSGD:
         rows = [{key: float(v) for key, v in zip(keys, mb.rows[i])}
                 for i in order]
         return dataclasses.replace(state, metrics=state.metrics.reset()), rows
+
+    # -- population regime -----------------------------------------------------
+    def population_engine(self):
+        """The lazily-built :class:`~repro.population.PopulationEngine`
+        behind :meth:`run_sampled` (requires ``config.population``)."""
+        if self.population is None:
+            raise ValueError(
+                "no population bound — construct the engine with "
+                "EngineConfig(population=Population(cells=...)) to use the "
+                "sampled-participation regime")
+        if self._population_engine is None:
+            from repro.population import PopulationEngine
+            self._population_engine = PopulationEngine(self)
+        return self._population_engine
+
+    def init_server(self, key, model_init: Callable):
+        """Single-replica :class:`~repro.population.ServerState` (the
+        population regime's counterpart of :meth:`init` — no worker axis;
+        peak state memory in this regime is bounded by k = topology.n)."""
+        return self.population_engine().init_server(key, model_init)
+
+    def run_sampled(self, server, batch_fn, rounds: int, *, sizes=None,
+                    eval_every: int = 0, eval_fn=None):
+        """Run ``rounds`` sampling rounds of the population regime: each
+        draws k = topology.n virtual clients (hierarchically, pure in
+        ``(seed, round)``), hydrates them into the (k, ...) state, runs one
+        global period on the unchanged round executor, and folds the
+        results back into the server model with dataset-size × staleness
+        weights (``sizes``: optional ``client_id -> dataset size``, e.g.
+        ``PopulationShards.client_size``).  ``batch_fn(client_ids, t)``
+        returns the global step t's batch for the drawn clients (leading
+        axis k).  Returns ``(ServerState, per-round history)``; each record
+        carries the ``participation`` channel."""
+        return self.population_engine().run(
+            server, batch_fn, rounds, sizes=sizes, eval_every=eval_every,
+            eval_fn=eval_fn)
 
     # -- inspection ------------------------------------------------------------
     def wire_stats(self, state: HSGDState):

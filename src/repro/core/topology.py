@@ -138,8 +138,18 @@ class Topology(abc.ABC):
         """Static (n,) bool: the workers whose state ``event`` replaces, or
         None for all of them.  ``aggregate`` keeps non-participants' rows
         untouched (GroupedTopology partial-group events); alternate sync
-        paths (the comms wire) must honor the same contract."""
+        paths (the comms wire) must honor the same contract.
+
+        This is the *static scope* of the :class:`~repro.population.
+        Participation` protocol (``event_mask``); :meth:`participation`
+        returns the protocol adapter over it."""
         return None
+
+    def participation(self):
+        """This topology's static view of the Participation protocol
+        (``event_mask == participants``; the dynamic scopes stay open)."""
+        from repro.population import StaticParticipation
+        return StaticParticipation(self)
 
     # -- telemetry ----------------------------------------------------------
     def level_groupings(self) -> Dict[int, Grouping]:

@@ -1,6 +1,8 @@
-from repro.data.federated import (FederatedDataset, dirichlet_partition,
-                                  label_shard_partition, make_classification)
+from repro.data.federated import (FederatedDataset, PopulationShards,
+                                  dirichlet_partition, label_shard_partition,
+                                  make_classification)
 from repro.data.synthetic import TokenStream, synth_lm_batch
 
-__all__ = ["FederatedDataset", "dirichlet_partition", "label_shard_partition",
-           "make_classification", "TokenStream", "synth_lm_batch"]
+__all__ = ["FederatedDataset", "PopulationShards", "dirichlet_partition",
+           "label_shard_partition", "make_classification", "TokenStream",
+           "synth_lm_batch"]

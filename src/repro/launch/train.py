@@ -23,11 +23,25 @@ per-level parameter divergences are measured ON device at every sync event
 and drained in bulk — no host gradient recompute, no schedule cut — and
 ``--trace out.json`` exports the run as Perfetto/Chrome-trace JSON.
 
+``--population`` switches to the sampled-participation regime
+(repro.population): the topology's n workers become the k *active slots* of
+a declared virtual-client population (cells per level, ``C1xC2x...``), each
+sampling round (one global period G) draws fresh clients hierarchically,
+and results fold back into a server model — so ``--steps`` must be a
+multiple of G and telemetry becomes one record per round.
+
+Flags are grouped per subsystem (``--help`` shows the groups); every
+subsystem group builds one section of the engine's ``EngineConfig``, which
+is echoed verbatim as the run's JSONL header line.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --workers 8 --groups 2 --G 8 --I 2 --steps 60 --batch 4 --seq 64 \
       --runtime 0.004,0.005:1e9,0.0003:1e10 --straggler lognormal:0.8 \
       --deadline 0.004
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --workers 8 --groups 2 --G 8 --I 2 --steps 64 --batch 4 --seq 64 \
+      --population 1000x1000 --sample-k 8 --sample-seed 7
 """
 from __future__ import annotations
 
@@ -42,105 +56,149 @@ import jax.numpy as jnp
 from repro.checkpoint import restore, save
 from repro.comms import Comms
 from repro.configs import get_config, reduced
-from repro.core import (HSGD, HierarchySpec, all_divergences, contiguous,
-                        make_executor, make_topology, per_worker_grads)
+from repro.core import (EngineConfig, HSGD, HierarchySpec, all_divergences,
+                        contiguous, make_topology, per_worker_grads)
 from repro.data import TokenStream
 from repro.models import build_model
 from repro.optim import cosine, momentum, sgd
 
 
 def build_argparser():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true",
-                    help="CPU-scale same-family variant")
-    ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--groups", type=int, default=2)
-    ap.add_argument("--G", type=int, default=8)
-    ap.add_argument("--I", type=int, default=2)
-    ap.add_argument("--levels", type=str, default="",
-                    help="multi-level spec 'N1,N2,..:P1,P2,..' (overrides "
-                         "--workers/--groups/--G/--I)")
-    ap.add_argument("--backend", default="sim", choices=["sim", "mesh"],
-                    help="executor: 'sim' (single-device vmap) or 'mesh' "
-                         "(shard_map; one device per worker, sync events "
-                         "lower to named-axis all-reduces)")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=4, help="per-worker batch")
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "momentum"])
-    ap.add_argument("--aggregator", default="mean",
-                    choices=["mean", "compressed", "sign"],
-                    help="aggregation rule applied at every sync event")
-    ap.add_argument("--sync-dtype", default=None,
-                    help="aggregation payload dtype override (bfloat16 "
-                         "halves sync bytes; alone it implies --aggregator "
-                         "compressed)")
-    ap.add_argument("--comms", default=None,
-                    choices=["identity", "int8", "sign", "topk"],
-                    help="communication plan: fuse syncs into flat "
-                         "per-dtype buffers and ship them through this "
-                         "codec (repro.comms); adds per-level wire "
-                         "accounting to the telemetry.  Default: off "
-                         "(bitwise-identical leaf-wise path)")
-    ap.add_argument("--comms-block", type=int, default=0,
-                    help="codec block size override (int8/sign)")
-    ap.add_argument("--comms-rate", type=float, default=0.0,
-                    help="top-k sparsification rate override (topk)")
-    ap.add_argument("--runtime", default=None,
-                    help="simulated-time model 'COMPUTE[,LAT:BW,...]': "
-                         "seconds per local step, then one latency:bandwidth"
-                         " pair per hierarchy level outermost-first "
-                         "(default links: a 10x-per-tier datacenter ladder)."
-                         "  Adds sim_time_s / per-level sim_sync_s to the "
-                         "telemetry and a final runtime report; sync cost "
-                         "is priced from the comms payload bytes, so "
-                         "--comms codecs visibly buy simulated time.  "
-                         "Example: --runtime 0.004,0.005:1e9,0.0003:1e10")
-    ap.add_argument("--straggler", default=None,
-                    help="heterogeneity regime 'name[:params]': "
-                         "fixed[:frac:factor] | lognormal[:sigma] | "
-                         "bursty[:p_enter:p_exit:factor] (needs --runtime)")
-    ap.add_argument("--deadline", default=None,
-                    help="deadline-elastic participation: slack seconds "
-                         "('2.0') or per-level 'L1:2.0,L2:0.5' — workers "
-                         "missing a sync's deadline are dropped from that "
-                         "event only, keeping their params and comms "
-                         "residuals (needs --runtime; works on both "
-                         "backends)")
-    ap.add_argument("--runtime-seed", type=int, default=0,
-                    help="straggler sampler seed (draws are pure in "
-                         "(seed, step): policies compare on identical "
-                         "compute times)")
-    ap.add_argument("--audit", action="store_true",
-                    help="print the repro.analysis collective audit of the "
-                         "lowered sync plan (per-event sync ops, wire "
-                         "dtypes, payload bytes, lint findings) before "
-                         "training starts")
-    ap.add_argument("--probes", action="store_true",
-                    help="in-graph observability (repro.obs): carry the "
-                         "on-device divergence probe through training — "
-                         "per-level parameter divergences at every sync "
-                         "event (div_global/div_up_Lℓ/div_down_Lℓ in the "
-                         "JSONL) plus a per-step grad_norm channel, drained "
-                         "in one transfer at telemetry boundaries.  "
-                         "--divergence-every is then satisfied by the "
-                         "probe values (no host gradient recompute, no "
-                         "schedule cut)")
-    ap.add_argument("--trace", default="",
-                    help="export the run as Chrome-trace-event/Perfetto "
-                         "JSON to this path (open in ui.perfetto.dev): "
-                         "per-worker compute/wait spans and per-level sync "
-                         "spans with --runtime, step-index spans without; "
-                         "probe divergences ride along as counter tracks "
-                         "with --probes")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--divergence-every", type=int, default=0)
-    ap.add_argument("--out", default="")
+    """Flags grouped per subsystem; each subsystem group feeds one section
+    of the engine's :class:`~repro.core.EngineConfig` (echoed as the JSONL
+    header's ``config`` line)."""
+    ap = argparse.ArgumentParser(
+        description="H-SGD training driver (repro.launch.train)")
+
+    g = ap.add_argument_group("model")
+    g.add_argument("--arch", default="qwen2-0.5b")
+    g.add_argument("--reduced", action="store_true",
+                   help="CPU-scale same-family variant")
+
+    g = ap.add_argument_group(
+        "topology", "hierarchy shape + the aggregation rule at sync events")
+    g.add_argument("--workers", type=int, default=8)
+    g.add_argument("--groups", type=int, default=2)
+    g.add_argument("--G", type=int, default=8)
+    g.add_argument("--I", type=int, default=2)
+    g.add_argument("--levels", type=str, default="",
+                   help="multi-level spec 'N1,N2,..:P1,P2,..' (overrides "
+                        "--workers/--groups/--G/--I)")
+    g.add_argument("--aggregator", default="mean",
+                   choices=["mean", "compressed", "sign"],
+                   help="aggregation rule applied at every sync event")
+    g.add_argument("--sync-dtype", default=None,
+                   help="aggregation payload dtype override (bfloat16 "
+                        "halves sync bytes; alone it implies --aggregator "
+                        "compressed)")
+
+    g = ap.add_argument_group(
+        "training", "optimizer, schedule length, data shape, executor")
+    g.add_argument("--backend", default="sim", choices=["sim", "mesh"],
+                   help="executor (EngineConfig.executor): 'sim' "
+                        "(single-device vmap) or 'mesh' (shard_map; one "
+                        "device per worker, sync events lower to "
+                        "named-axis all-reduces)")
+    g.add_argument("--steps", type=int, default=50)
+    g.add_argument("--batch", type=int, default=4, help="per-worker batch")
+    g.add_argument("--seq", type=int, default=64)
+    g.add_argument("--lr", type=float, default=3e-3)
+    g.add_argument("--optimizer", default="sgd", choices=["sgd", "momentum"])
+    g.add_argument("--seed", type=int, default=0)
+
+    g = ap.add_argument_group(
+        "comms", "communication plan (EngineConfig.comms)")
+    g.add_argument("--comms", default=None,
+                   choices=["identity", "int8", "sign", "topk"],
+                   help="fuse syncs into flat per-dtype buffers and ship "
+                        "them through this codec (repro.comms); adds "
+                        "per-level wire accounting to the telemetry.  "
+                        "Default: off (bitwise-identical leaf-wise path)")
+    g.add_argument("--comms-block", type=int, default=0,
+                   help="codec block size override (int8/sign)")
+    g.add_argument("--comms-rate", type=float, default=0.0,
+                   help="top-k sparsification rate override (topk)")
+
+    g = ap.add_argument_group(
+        "runtime", "simulated-time heterogeneity (EngineConfig.runtime)")
+    g.add_argument("--runtime", default=None,
+                   help="simulated-time model 'COMPUTE[,LAT:BW,...]': "
+                        "seconds per local step, then one latency:bandwidth"
+                        " pair per hierarchy level outermost-first "
+                        "(default links: a 10x-per-tier datacenter ladder)."
+                        "  Adds sim_time_s / per-level sim_sync_s to the "
+                        "telemetry and a final runtime report; sync cost "
+                        "is priced from the comms payload bytes, so "
+                        "--comms codecs visibly buy simulated time.  "
+                        "Example: --runtime 0.004,0.005:1e9,0.0003:1e10")
+    g.add_argument("--straggler", default=None,
+                   help="heterogeneity regime 'name[:params]': "
+                        "fixed[:frac:factor] | lognormal[:sigma] | "
+                        "bursty[:p_enter:p_exit:factor] (needs --runtime)")
+    g.add_argument("--deadline", default=None,
+                   help="deadline-elastic participation: slack seconds "
+                        "('2.0') or per-level 'L1:2.0,L2:0.5' — workers "
+                        "missing a sync's deadline are dropped from that "
+                        "event only, keeping their params and comms "
+                        "residuals (needs --runtime; works on both "
+                        "backends)")
+    g.add_argument("--runtime-seed", type=int, default=0,
+                   help="straggler sampler seed (draws are pure in "
+                        "(seed, step): policies compare on identical "
+                        "compute times)")
+
+    g = ap.add_argument_group(
+        "population",
+        "sampled participation from a virtual-client population "
+        "(EngineConfig.population; repro.population)")
+    g.add_argument("--population", default="",
+                   help="declare a virtual-client population as per-level "
+                        "cell fanouts 'C1xC2x...' (e.g. 1000x1000 = 10^6 "
+                        "clients behind a two-level topology); each "
+                        "sampling round (one global period G) draws the "
+                        "topology's n clients hierarchically and folds the "
+                        "round back into a server model, so --steps must "
+                        "be a multiple of G")
+    g.add_argument("--sample-k", type=int, default=0,
+                   help="expected active clients per round; cross-checked "
+                        "against the topology's n (the draw always fills "
+                        "exactly n slots)")
+    g.add_argument("--sample-seed", type=int, default=0,
+                   help="population sampler namespace: draws are pure in "
+                        "(sample-seed, round)")
+
+    g = ap.add_argument_group(
+        "observability",
+        "telemetry, probes, tracing, audits (EngineConfig.metrics)")
+    g.add_argument("--audit", action="store_true",
+                   help="print the repro.analysis collective audit of the "
+                        "lowered sync plan (per-event sync ops, wire "
+                        "dtypes, payload bytes, lint findings) before "
+                        "training starts")
+    g.add_argument("--probes", action="store_true",
+                   help="in-graph observability (repro.obs): carry the "
+                        "on-device divergence probe through training — "
+                        "per-level parameter divergences at every sync "
+                        "event (div_global/div_up_Lℓ/div_down_Lℓ in the "
+                        "JSONL) plus a per-step grad_norm channel, drained "
+                        "in one transfer at telemetry boundaries.  "
+                        "--divergence-every is then satisfied by the "
+                        "probe values (no host gradient recompute, no "
+                        "schedule cut)")
+    g.add_argument("--trace", default="",
+                   help="export the run as Chrome-trace-event/Perfetto "
+                        "JSON to this path (open in ui.perfetto.dev): "
+                        "per-worker compute/wait spans and per-level sync "
+                        "spans with --runtime, step-index spans without; "
+                        "probe divergences ride along as counter tracks "
+                        "with --probes")
+    g.add_argument("--log-every", type=int, default=10)
+    g.add_argument("--divergence-every", type=int, default=0)
+
+    g = ap.add_argument_group("io", "checkpointing and output")
+    g.add_argument("--ckpt-dir", default="")
+    g.add_argument("--ckpt-every", type=int, default=0)
+    g.add_argument("--out", default="")
     return ap
 
 
@@ -175,6 +233,45 @@ def make_spec(args) -> HierarchySpec:
                          (args.G, args.I))
 
 
+def _run_sampled(args, ap, eng, model, cfg, spec):
+    """Population-mode training loop: one sampling round per global period,
+    virtual clients' token streams keyed by client id (pure in
+    ``(seed, client_id, t)``; empty slots get the reserved stream 0)."""
+    from repro.data.synthetic import synth_lm_batch
+    G = spec.periods[0]
+    server = eng.init_server(jax.random.PRNGKey(args.seed), model.init)
+    if args.audit:
+        popeng = eng.population_engine()
+        print(popeng.audit(server,
+                           config=f"{args.backend}/{args.arch}/pop").summary())
+
+    def batch_fn(client_ids, t):
+        bs = [synth_lm_batch(args.seed, t, args.batch, args.seq,
+                             cfg.vocab_size, worker=int(c) + 1)
+              for c in client_ids]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+
+    t0 = time.time()
+    server, hist = eng.run_sampled(server, batch_fn, args.steps // G)
+    elapsed = round(time.time() - t0, 2)
+    log_rounds = max(1, args.log_every // G)
+    history = []
+    for rec in hist:
+        if rec["round"] % log_rounds and rec["t"] != args.steps:
+            continue
+        out = {"step": rec["t"], "round": rec["round"], "loss": rec["ce"],
+               "elapsed_s": elapsed, "participation": rec["participation"]}
+        for key in ("sim_time_s", "dropped", "wire_bytes"):
+            if key in rec:
+                out[key] = rec[key]
+        history.append(out)
+        print(json.dumps(out))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(history, f, indent=1)
+    return history
+
+
 def main(argv=None):
     ap = build_argparser()
     args = ap.parse_args(argv)
@@ -195,6 +292,37 @@ def main(argv=None):
     spec = make_spec(args)
     n = spec.n_workers
 
+    population = None
+    if args.population:
+        from repro.population import Population
+        try:
+            cells = tuple(int(c) for c in
+                          args.population.lower().replace("x", ",").split(",")
+                          if c)
+        except ValueError:
+            ap.error(f"--population must be per-level cell fanouts like "
+                     f"1000x1000 (got {args.population!r})")
+        if len(cells) != spec.num_levels:
+            ap.error(f"--population {args.population}: {len(cells)} cell "
+                     f"fanouts for a {spec.num_levels}-level hierarchy "
+                     f"(need one per level)")
+        if args.sample_k and args.sample_k != n:
+            ap.error(f"--sample-k {args.sample_k} != topology n={n}: the "
+                     f"draw fills exactly one client per engine slot, so k "
+                     f"is the topology's n (adjust --workers/--levels)")
+        if args.steps % spec.periods[0] != 0:
+            ap.error(f"--population: --steps {args.steps} must be a "
+                     f"multiple of the global period G={spec.periods[0]} "
+                     f"(one sampling round per global period)")
+        for val, name in ((args.ckpt_dir, "--ckpt-dir"),
+                          (args.trace, "--trace"),
+                          (args.divergence_every, "--divergence-every")):
+            if val:
+                ap.error(f"{name} is not supported in population mode")
+        population = Population(cells, seed=args.sample_seed)
+    elif args.sample_k or args.sample_seed:
+        ap.error("--sample-k/--sample-seed need --population")
+
     lr = cosine(args.lr, args.steps, warmup_steps=min(10, args.steps // 10))
     opt = sgd(lr) if args.optimizer == "sgd" else momentum(lr)
     topo = make_topology(
@@ -209,9 +337,20 @@ def main(argv=None):
             kw["rate"] = args.comms_rate
         comms = Comms(args.comms, **kw)
     runtime = make_runtime_model(args, spec.num_levels)
-    eng = HSGD(model.loss, opt, topo, executor=make_executor(args.backend),
-               comms=comms, runtime=runtime,
-               metrics="on" if args.probes else None)
+    engine_config = EngineConfig(executor=args.backend, comms=comms,
+                                 runtime=runtime,
+                                 metrics="on" if args.probes else None,
+                                 population=population)
+    eng = HSGD(model.loss, opt, topo, engine_config)
+    from repro.obs import SCHEMA_VERSION
+    # JSONL header: the full engine configuration, round-trippable
+    print(json.dumps({"schema_version": SCHEMA_VERSION,
+                      "backend": args.backend, "probes": args.probes,
+                      "config": engine_config.describe()}))
+
+    if population is not None:
+        return _run_sampled(args, ap, eng, model, cfg, spec)
+
     state = eng.init(jax.random.PRNGKey(args.seed), model.init)
     if args.audit:
         # sync-subprogram audit only (no batch_fn): fast, and enough for
@@ -286,9 +425,7 @@ def main(argv=None):
     history = []
     wire_cum = 0
     if args.probes:
-        from repro.obs import SCHEMA_VERSION, validate_record
-        print(json.dumps({"schema_version": SCHEMA_VERSION,
-                          "probes": True, "backend": args.backend}))
+        from repro.obs import validate_record
     for srec in step_hist:
         step = srec["t"]
         wire_cum += srec.get("wire_bytes", 0)

@@ -142,6 +142,11 @@ for _spec in (
     MetricSpec("divergence", "mapping", "launch", "param²/level",
                "host-oracle gradient divergences (all_divergences)"),
     MetricSpec("elapsed_s", "scalar", "launch", "s", "wall-clock elapsed"),
+    MetricSpec("round", "int", "population", "round",
+               "1-indexed sampling-round number (population regime)"),
+    MetricSpec("participation", "mapping", "population", "clients",
+               "per-round sampled-participation summary: k, population, "
+               "cells, active, stale_slots, reseen, unique"),
 ):
     register_metric(_spec)
 del _spec

@@ -1,9 +1,10 @@
 """Data pipeline tests: partitions, determinism, stream seekability."""
 import numpy as np
+import pytest
 
-from repro.data import (FederatedDataset, dirichlet_partition,
-                        label_shard_partition, make_classification,
-                        synth_lm_batch, TokenStream)
+from repro.data import (FederatedDataset, PopulationShards,
+                        dirichlet_partition, label_shard_partition,
+                        make_classification, synth_lm_batch, TokenStream)
 
 
 def test_label_shard_partition_exact():
@@ -40,6 +41,62 @@ def test_federated_batch_deterministic():
     b3 = ds.batch(step=4, batch_size=4)
     assert not np.array_equal(b1["x"], b3["x"])
     assert b1["x"].shape == (8, 4, 4)
+
+
+def test_partition_validation_actionable():
+    _, y = make_classification(2, num_classes=5, dim=4, per_class=40)
+    with pytest.raises(ValueError, match="alpha > 0"):
+        dirichlet_partition(y, 4, alpha=0.0)
+    with pytest.raises(ValueError, match="alpha > 0"):
+        dirichlet_partition(y, 4, alpha=-1.0)
+    with pytest.raises(ValueError, match="n_workers >= 1"):
+        dirichlet_partition(y, 0, alpha=0.5)
+    with pytest.raises(ValueError, match="one label set per worker"):
+        label_shard_partition(y, [[0], [1]], n_workers=4)
+    with pytest.raises(ValueError, match="do not occur in y"):
+        label_shard_partition(y, [[0], [9]])
+
+
+def test_require_workers():
+    x, y = make_classification(0, num_classes=4, dim=4, per_class=30)
+    parts = label_shard_partition(y, [[j % 4] for j in range(8)])
+    ds = FederatedDataset(x, y, parts)
+    assert ds.require_workers(8) is ds  # chains
+    with pytest.raises(ValueError, match="topology expects n=4"):
+        ds.require_workers(4)
+    with pytest.raises(ValueError, match="are empty"):
+        FederatedDataset(x, y, parts[:7] + [np.empty(0, np.int64)]) \
+            .require_workers(8)
+
+
+def test_population_shards_pure_and_bounded():
+    ps = PopulationShards(population=10**9, num_classes=6, dim=8, seed=4)
+    ids = np.array([3, 10**8, -1])
+    b1 = ps.batch(ids, step=5, batch_size=7)
+    b2 = ps.batch(ids, step=5, batch_size=7)
+    np.testing.assert_array_equal(b1["x"], b2["x"])
+    np.testing.assert_array_equal(b1["y"], b2["y"])
+    assert b1["x"].shape == (3, 7, 8) and b1["x"].dtype == np.float32
+    assert b1["y"].shape == (3, 7) and np.isfinite(b1["x"]).all()
+    b3 = ps.batch(ids, step=6, batch_size=7)
+    assert not np.array_equal(b1["x"], b3["x"])
+    # every sample's label comes from the client's declared shard
+    for j, cid in enumerate(ids):
+        assert set(b1["y"][j]) <= set(ps.client_labels(cid).tolist())
+    # size law agrees with the sampler's default (weights match data)
+    from repro.population.sampler import default_client_sizes
+    law = default_client_sizes(4)
+    assert ps.client_size(3) == int(law(3))
+    assert ps.client_size(-1) == 0
+    with pytest.raises(ValueError, match="outside the declared population"):
+        ps.client_size(10**9)
+
+
+def test_population_shards_validation():
+    with pytest.raises(ValueError, match="population"):
+        PopulationShards(population=0)
+    with pytest.raises(ValueError, match="labels_per_client"):
+        PopulationShards(population=10, num_classes=4, labels_per_client=5)
 
 
 def test_token_stream_seekable_and_learnable():

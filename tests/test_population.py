@@ -1,0 +1,379 @@
+"""Population regime: hierarchical virtual-client sampling, hydrate/fold-back,
+the Participation protocol, and the EngineConfig consolidation.
+
+The contract tests: a sampled round with k = n = population and uniform
+weights is BITWISE the full-participation engine (params and opt state, on
+both executors); weighted fold-back matches a numpy host oracle; empty-cell
+draws hit the zero-denominator guard, never NaN; and nothing of population
+size is ever materialized.
+
+Mesh tests need 8 devices (ci.yml:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); they skip without.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, HSGD, HierarchySpec, MeshExecutor,
+                        make_topology)
+from repro.data import PopulationShards
+from repro.models import SimpleConfig, SimpleModel
+from repro.optim import adam, sgd
+from repro.population import (ComposedParticipation, FullParticipation,
+                              HierarchicalSampler, Population,
+                              SampledParticipation, StaticParticipation,
+                              compose, make_population)
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices: export XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax init")
+
+GS, PERIODS = (2, 4), (4, 2)   # k = 8 slots, G = 4 steps per sampling round
+DIM, CLASSES = 12, 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    return SimpleModel(SimpleConfig(kind="mlp", input_dim=DIM, hidden=16,
+                                    num_classes=CLASSES))
+
+
+@pytest.fixture(scope="module")
+def shards():
+    return PopulationShards(population=8, num_classes=CLASSES, dim=DIM,
+                            seed=5)
+
+
+def tree_equal(a, b):
+    return all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)))
+
+
+def topo():
+    return make_topology("uniform", spec=HierarchySpec(GS, PERIODS))
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+def test_draw_pure_and_sorted():
+    s = HierarchicalSampler(Population(cells=(50, 40), seed=9), GS)
+    d1, d2 = s.draw(3), s.draw(3)
+    np.testing.assert_array_equal(d1.client_ids, d2.client_ids)
+    np.testing.assert_array_equal(d1.paths, d2.paths)
+    assert not np.array_equal(d1.client_ids, s.draw(4).client_ids)
+    # cell-major static layout: top-level cell indices sorted, 4 slots each
+    assert (np.diff(d1.paths[:, 0].reshape(2, 4), axis=1) == 0).all()
+    assert d1.paths[0, 0] < d1.paths[4, 0]
+    assert d1.k == 8 and d1.num_cells() == 2
+    # Theorem-2 regrouping: slot-side grouping is the contiguous 2x4
+    assert d1.grouping().assignment == (0,) * 4 + (1,) * 4
+
+
+def test_draw_identity_when_k_equals_population():
+    s = HierarchicalSampler(Population(cells=GS, seed=0), GS)
+    for r in range(3):
+        np.testing.assert_array_equal(s.draw(r).client_ids, np.arange(8))
+
+
+def test_draw_seeds_independent():
+    a = HierarchicalSampler(Population(cells=(100, 100), seed=1), GS)
+    b = HierarchicalSampler(Population(cells=(100, 100), seed=2), GS)
+    assert not np.array_equal(a.draw(0).client_ids, b.draw(0).client_ids)
+
+
+def test_sampler_validation():
+    with pytest.raises(ValueError, match="one fanout per"):
+        HierarchicalSampler(Population(cells=(100,)), GS)
+    with pytest.raises(ValueError, match="must be >="):
+        HierarchicalSampler(Population(cells=(100, 2)), GS)
+
+
+def test_availability_marks_empty_slots():
+    pop = Population(cells=(100, 100), seed=3, p_available=0.5)
+    s = HierarchicalSampler(pop, GS)
+    draws = [s.draw(r) for r in range(20)]
+    active = np.concatenate([d.active for d in draws])
+    assert 0.25 < active.mean() < 0.75
+    d0 = draws[0]
+    np.testing.assert_array_equal(d0.client_ids, s.draw(0).client_ids)
+    assert (d0.client_ids[~d0.active] == -1).all()
+
+
+def test_make_population():
+    assert make_population(None) is None
+    p = Population(cells=(4, 2))
+    assert make_population(p) is p
+    assert make_population((10, 20)).cells == (10, 20)
+    assert make_population(16).cells == (16,)
+    assert make_population((10, 20)).size == 200
+    with pytest.raises(TypeError):
+        make_population("millions")
+
+
+# ---------------------------------------------------------------------------
+# bitwise: k = n = population, uniform weights == full participation
+# ---------------------------------------------------------------------------
+def _bitwise_check(model, shards, optimizer, executor=None, rounds=3):
+    batch = lambda t: jax.tree.map(jnp.asarray,
+                                   shards.batch(np.arange(8), t, 6))
+    T = rounds * PERIODS[0]
+
+    base = HSGD(model.loss, optimizer(), topo(),
+                EngineConfig(executor=executor() if executor else None))
+    st = base.init(jax.random.PRNGKey(0), model.init)
+    st, _ = base.run_rounds(st, batch, T)
+
+    pop = HSGD(model.loss, optimizer(), topo(), EngineConfig(
+        executor=executor() if executor else None,
+        population=Population(cells=GS, seed=0)))
+    server = pop.init_server(jax.random.PRNGKey(0), model.init)
+    server, hist = pop.run_sampled(
+        server, lambda ids, t: batch(t), rounds)
+
+    st = jax.device_get(st)
+    row0 = jax.tree.map(lambda x: x[0], (st.params, st.opt_state))
+    assert tree_equal(row0[0], server.params)
+    assert tree_equal(row0[1], server.opt_state)
+    assert hist[-1]["participation"]["unique"] == 8  # identity redraws
+    return hist
+
+
+def test_bitwise_full_participation_sim_sgd(model, shards):
+    hist = _bitwise_check(model, shards, lambda: sgd(0.1))
+    assert [h["round"] for h in hist] == [1, 2, 3]
+
+
+def test_bitwise_full_participation_sim_adam(model, shards):
+    # opt-state moments take the fold-back's dense path
+    _bitwise_check(model, shards, lambda: adam(3e-3))
+
+
+@needs_devices
+def test_bitwise_full_participation_mesh(model, shards):
+    from repro.launch.mesh import make_host_mesh
+    # exact=True is the repo's bitwise mesh ladder: mesh == sim == fold-back
+    ex = lambda: MeshExecutor(make_host_mesh(group_sizes=GS), exact=True)
+    _bitwise_check(model, shards, lambda: sgd(0.1), executor=ex, rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# fold-back vs host oracle
+# ---------------------------------------------------------------------------
+def test_weighted_fold_matches_host_oracle(model, shards):
+    eng = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(
+        population=Population(cells=GS, seed=0, weighting="size")))
+    popeng = eng.population_engine()
+    server = eng.init_server(jax.random.PRNGKey(1), model.init)
+    batch = lambda ids, t: jax.tree.map(jnp.asarray,
+                                        shards.batch(ids, t, 6))
+    sizes = shards.size_fn()
+    # run the inner round by hand to capture the pre-fold slot params
+    draw = popeng.sampler.draw(0)
+    state = popeng.hydrate(server)
+    state, _ = popeng.inner.run_rounds(
+        state, lambda t: batch(draw.client_ids, t), PERIODS[0])
+    w, meta = popeng.round_weights(draw, sizes)
+    assert meta["active"] == 8
+    np.testing.assert_allclose(
+        w, [sizes(int(c)) for c in draw.client_ids])
+    folded = popeng.fold_back(server, state, w)
+    p = jax.device_get(state.params)
+    oracle = jax.tree.map(
+        lambda x: np.average(np.asarray(x, np.float64), axis=0, weights=w),
+        p)
+    for got, want in zip(jax.tree.leaves(folded.params),
+                         jax.tree.leaves(oracle)):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-6,
+                                   atol=1e-7)
+
+
+def test_nonzero_fold_guard_and_oracle(model):
+    eng = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(
+        population=Population(cells=GS, fold="nonzero")))
+    popeng = eng.population_engine()
+    assert popeng.fold_mode == "nonzero"
+    server = eng.init_server(jax.random.PRNGKey(2), model.init)
+    state = popeng.hydrate(server)
+    # slot j moves only entries with (flat index % 8) == j — sparse-codec
+    # shape deltas; entries 0-5 move (weighted slots), 6-7 stay untouched
+    w = np.array([1.0, 2.0, 3.0, 4.0, 1.0, 1.0, 0.0, 0.0])
+
+    def perturb(x):
+        dt = x.dtype
+        x = np.asarray(x, np.float64)
+        idx = np.arange(x[0].size).reshape(x.shape[1:]) % 8
+        return jnp.asarray(np.stack([
+            x[j] + (idx == j) * (0.5 + j) for j in range(8)]), dt)
+
+    state = dataclasses.replace(state,
+                                params=jax.tree.map(perturb, state.params))
+    folded = popeng.fold_back(server, state, w)
+    for s, got in zip(jax.tree.leaves(server.params),
+                      jax.tree.leaves(folded.params)):
+        s, got = np.asarray(s, np.float64), np.asarray(got, np.float64)
+        idx = np.arange(s.size).reshape(s.shape) % 8
+        delta = got - s
+        assert np.isfinite(got).all()
+        for j in range(8):
+            sel = idx == j
+            if not sel.any():
+                continue
+            if w[j] > 0:
+                # only slot j moved these entries: weighted mean of one
+                # contributor is its own delta
+                np.testing.assert_allclose(delta[sel], 0.5 + j, rtol=1e-5)
+            else:
+                # zero total weight -> denominator floor -> server value
+                np.testing.assert_allclose(delta[sel], 0.0, atol=1e-12)
+
+
+def test_all_empty_round_keeps_server_bitwise(model, shards):
+    eng = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(
+        population=Population(cells=(100, 100), seed=0, p_available=0.0)))
+    server = eng.init_server(jax.random.PRNGKey(3), model.init)
+    p0 = jax.tree.map(np.asarray, server.params)
+    batch = lambda ids, t: jax.tree.map(jnp.asarray,
+                                        shards.batch(ids % 8, t, 6))
+    server, hist = eng.run_sampled(server, batch, 2)
+    assert tree_equal(p0, server.params)
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(
+        jax.tree.map(np.asarray, server.params)))
+    assert hist[0]["participation"]["active"] == 0
+
+
+def test_partial_availability_trains_finite(model, shards):
+    eng = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(
+        population=Population(cells=(100, 100), seed=1, p_available=0.6,
+                              weighting="size")))
+    server = eng.init_server(jax.random.PRNGKey(4), model.init)
+    batch = lambda ids, t: jax.tree.map(jnp.asarray,
+                                        shards.batch(ids % 8, t, 6))
+    server, hist = eng.run_sampled(server, batch, 4)
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(
+        jax.tree.map(np.asarray, server.params)))
+    acts = [h["participation"]["active"] for h in hist]
+    assert min(acts) >= 0 and max(acts) <= 8 and sum(acts) > 0
+
+
+# ---------------------------------------------------------------------------
+# population scale: memory bounded by k, auditor clean
+# ---------------------------------------------------------------------------
+def test_million_client_state_bounded_by_k(model):
+    shards = PopulationShards(population=10**6, num_classes=CLASSES,
+                              dim=DIM, seed=7)
+    eng = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(
+        population=Population(cells=(1000, 1000), seed=7)))
+    assert eng.population.size == 10**6
+    server = eng.init_server(jax.random.PRNGKey(0), model.init)
+    popeng = eng.population_engine()
+    state = popeng.hydrate(server)
+    k = 8
+    for leaf in jax.tree.leaves((state.params, state.opt_state)):
+        assert leaf.shape[0] == k
+        assert leaf.size <= k * 10_000  # nothing population-sized
+    draw = popeng.sampler.draw(0)
+    assert draw.client_ids.size == k and draw.client_ids.max() < 10**6
+    batch = lambda ids, t: jax.tree.map(jnp.asarray, shards.batch(ids, t, 6))
+    server, hist = eng.run_sampled(server, batch, 2, sizes=shards.size_fn())
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(
+        jax.tree.map(np.asarray, server.params)))
+    p = hist[-1]["participation"]
+    assert p["population"] == 10**6 and p["k"] == 8
+    # ledger grows with sampled clients, not the population
+    assert len(server.ledger.counts) <= 16
+
+
+def test_audit_clean_on_sampled_round_body(model, shards):
+    eng = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(
+        population=Population(cells=(1000, 1000), seed=7)))
+    server = eng.init_server(jax.random.PRNGKey(0), model.init)
+    batch = lambda ids, t: jax.tree.map(jnp.asarray,
+                                        shards.batch(ids % 8, t, 6))
+    report = eng.population_engine().audit(server, batch, config="pop/sim")
+    assert not report.unwaived, report.summary()
+    # the sampled round body defers level 1 to the fold-back: the audited
+    # schedule must fire only sub-global events
+    assert all(not key.startswith("L1") for key in report.events)
+
+
+# ---------------------------------------------------------------------------
+# Participation protocol
+# ---------------------------------------------------------------------------
+def test_participation_protocol_composes():
+    t = topo()
+    from repro.core.topology import SyncEvent
+    ev = SyncEvent(level=2)
+    static = StaticParticipation(t)
+    # a uniform topology restricts nothing: every hook is "no restriction"
+    assert static.event_mask(ev) is None
+    assert static.round_mask(ev) is None
+    assert FullParticipation().event_mask(ev) is None
+
+    pop = Population(cells=(100, 100), seed=3, p_available=0.5)
+    sampled = SampledParticipation(pop, GS, round_index=0)
+    draw = HierarchicalSampler(pop, GS).draw(0)
+    assert not draw.active.all()  # seed 3 @ p=0.5 has empty slots
+    np.testing.assert_array_equal(sampled.round_mask(ev), draw.active)
+    assert sampled.draw(0).round_index == 0  # pinned
+
+    composed = compose(static, None, sampled)
+    assert isinstance(composed, ComposedParticipation)
+    # AND of masks: the only restriction is the sampler's availability
+    np.testing.assert_array_equal(composed.round_mask(ev), draw.active)
+    assert composed.event_mask(ev) is None
+    assert composed.draw(0).round_index == 0
+    # single member: compose collapses to it; none: the identity element
+    assert compose(static, None) is static
+    assert isinstance(compose(None, None), FullParticipation)
+    assert t.participation().topology is t
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig consolidation + deprecation shim
+# ---------------------------------------------------------------------------
+def test_engineconfig_shim_warns_and_matches(model, shards):
+    batch = lambda t: jax.tree.map(jnp.asarray,
+                                   shards.batch(np.arange(8), t, 6))
+    new = HSGD(model.loss, sgd(0.1), topo(), EngineConfig(executor="sim"))
+    with pytest.warns(DeprecationWarning, match="executor=..."):
+        old = HSGD(model.loss, sgd(0.1), topo(), executor="sim")
+    assert old.config == new.config
+    s1 = new.init(jax.random.PRNGKey(0), model.init)
+    s2 = old.init(jax.random.PRNGKey(0), model.init)
+    s1, _ = new.run_rounds(s1, batch, 4)
+    s2, _ = old.run_rounds(s2, batch, 4)
+    assert tree_equal(s1.params, s2.params)
+
+
+def test_engineconfig_scalar_kwargs_fold_silently(model):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng = HSGD(model.loss, sgd(0.1), topo(), jit=False, accum_steps=2)
+    assert eng.config == EngineConfig(jit=False, accum_steps=2)
+
+
+def test_engineconfig_rejects_mixing(model):
+    with pytest.raises(TypeError, match="both config="):
+        HSGD(model.loss, sgd(0.1), topo(), EngineConfig(), comms="int8")
+
+
+def test_engineconfig_describe_roundtrips():
+    import json
+    cfg = EngineConfig(executor="sim", comms=None,
+                       population=Population(cells=(10, 10)))
+    d = json.loads(json.dumps(cfg.describe()))
+    assert d["executor"] == "sim"
+    assert d["population"]["cells"] == [10, 10]
+    assert d["jit"] is True
+
+
+def test_run_sampled_requires_population(model):
+    eng = HSGD(model.loss, sgd(0.1), topo())
+    with pytest.raises(ValueError, match="no population bound"):
+        eng.init_server(jax.random.PRNGKey(0), model.init)
